@@ -1,0 +1,232 @@
+"""Perf hillclimb driver: re-lower one dry-run cell under a variant and
+diff the three roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --cell qwen2.5-32b:prefill_32k --variant gqa_grouped
+
+Variants are named experiments (hypothesis -> change); each writes
+results/hillclimb/<cell>__<variant>.json so EXPERIMENTS.md §Perf can cite
+before/after numbers.  The process must be fresh per run (512-device flag),
+hence this is a separate __main__.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+
+import jax             # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "hillclimb")
+
+
+def apply_variant(name: str):
+    """Mutate global knobs for a named experiment.  Returns rule overrides
+    and a description."""
+    from repro.sharding.rules import default_rules
+    import repro.kernels.fastattn.ref as ref_mod
+    rules = default_rules()
+    desc = name
+    if name == "baseline":
+        pass
+    elif name == "no_seq_shard":
+        # Megatron-style: activations full-seq, ff sharded instead
+        rules["seq"] = None
+        rules["kv_seq"] = None
+    elif name == "kv_shard_heads":
+        # decode: shard KV cache on heads instead of cache-seq
+        rules["kv_seq"] = None
+        rules["heads"] = "model"
+    elif name == "flat_batch_decode":
+        # decode: spread batch over (data, model) -- needs B % 256 == 0
+        rules["batch"] = ("data", "model")
+        rules["kv_seq"] = None
+        rules["seq"] = None
+    elif name == "gqa_grouped":
+        _patch_gqa_grouped()
+    elif name == "gqa_grouped_bigblock":
+        _patch_gqa_grouped()
+        _patch_block_kv(2048)
+    elif name == "expert_local_dispatch":
+        _patch_moe_local_dispatch()
+    elif name == "remat_full":
+        _patch_remat("full")
+    elif name == "remat_none":
+        _patch_remat("none")
+    elif name == "kv_layout_bhsd":
+        import repro.layers.attention as attn
+        attn.KV_CACHE_LAYOUT = "bhsd"
+    else:
+        raise ValueError(name)
+    return rules
+
+
+def _patch_remat(policy: str):
+    import dataclasses
+    import repro.launch.dryrun as dr
+    orig = dr.parallel_for_mesh
+
+    def patched(mesh):
+        return dataclasses.replace(orig(mesh), remat=policy)
+    dr.parallel_for_mesh = patched
+
+
+def _patch_block_kv(bk):
+    from repro.core import fastattention as fa
+    orig = fa.fast_attention
+
+    def patched(q, k, v, **kw):
+        kw["block_kv1"] = bk
+        return orig(q, k, v, **kw)
+    fa.fast_attention = patched
+    import repro.layers.attention as attn
+    attn.fast_attention = patched
+
+
+def _patch_gqa_grouped():
+    """Replace flash_reference with the grouped-GQA version (no KV head
+    expansion: einsum carries the (Hkv, G) structure)."""
+    import repro.kernels.fastattn.ref as R
+    import jax.numpy as jnp
+
+    def flash_grouped(q, k, v, *, causal=True, window=None, softcap=None,
+                      scale=None, q_offset=0, kv_len=None, block_kv=512):
+        b, hq, sq, d = q.shape
+        hkv, skv = k.shape[1], k.shape[2]
+        g = hq // hkv
+        scale_ = scale if scale is not None else d ** -0.5
+        qg = q.reshape(b, hkv, g, sq, d)
+        block_kv = min(block_kv, skv)
+        n_chunks = (skv + block_kv - 1) // block_kv
+        if causal:
+            n_chunks = min(n_chunks, (q_offset + sq - 1) // block_kv + 1)
+        usable = n_chunks * block_kv
+        pad_n = usable - skv
+        kc, vc = k, v
+        if pad_n > 0:
+            kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad_n), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad_n), (0, 0)))
+        kc = kc[:, :, :usable].reshape(b, hkv, n_chunks, block_kv, d
+                                       ).transpose(2, 0, 1, 3, 4)
+        vc = vc[:, :, :usable].reshape(b, hkv, n_chunks, block_kv, d
+                                       ).transpose(2, 0, 1, 3, 4)
+        q_pos = q_offset + jnp.arange(sq)
+        eff = jnp.minimum(jnp.asarray(kv_len if kv_len is not None
+                                      else skv), skv)
+
+        def step(carry, inp):
+            m_prev, l_prev, acc = carry
+            j, k_j, v_j = inp
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_j,
+                           preferred_element_type=jnp.float32) * scale_
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            kv_pos = j * block_kv + jnp.arange(block_kv)
+            mask = jnp.ones((sq, block_kv), bool)
+            if causal:
+                mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+            if window is not None:
+                mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+            maskb = mask[None, None, None] & \
+                (kv_pos[None, None, None, None, :]
+                 < jnp.asarray(eff).reshape(-1, 1, 1, 1, 1))
+            s = jnp.where(maskb, s, R.NEG_INF)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, sq), R.NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+        acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0),
+                                      (jnp.arange(n_chunks), kc, vc))
+        l_safe = jnp.where(l == 0, 1.0, l)
+        out = (acc / l_safe[..., None]).astype(q.dtype)
+        return out.reshape(b, hq, sq, d)
+
+    def patched_flash_reference(q, k, v, **kw):
+        return flash_grouped(q, k, v, **kw)
+
+    R.flash_reference_grouped = flash_grouped
+    # route the public op through the grouped version
+    import repro.kernels.fastattn.ops as ops
+    orig_fastattn = ops.fastattn
+
+    def fastattn2(q, k, v, causal=True, window=None, softcap=None,
+                  scale=None, q_offset=0, block_q=256, block_kv1=1024,
+                  block_kv2=256, impl="reference"):
+        if impl == "reference":
+            return flash_grouped(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale,
+                                 q_offset=q_offset, block_kv=block_kv1)
+        return orig_fastattn(q, k, v, causal, window, softcap, scale,
+                             q_offset, block_q, block_kv1, block_kv2, impl)
+
+    import repro.core.fastattention as fa
+
+    def fast_attention2(q, k, v, *, causal=True, window=None, softcap=None,
+                        scale=None, q_offset=0, impl="reference",
+                        block_q=256, block_kv1=1024, block_kv2=256):
+        out = fastattn2(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal, window, softcap,
+                        scale, q_offset, block_q, block_kv1, block_kv2,
+                        impl)
+        return out.transpose(0, 2, 1, 3)
+
+    fa.fast_attention = fast_attention2
+    import repro.layers.attention as attn
+    attn.fast_attention = fast_attention2
+
+
+def _patch_moe_local_dispatch():
+    """Constrain MoE dispatch tensors so the argsort/gather stays local to
+    the data shard and only the expert-compute einsum crosses `model`."""
+    import repro.layers.moe as moe
+    from repro.sharding.rules import constrain as C
+    orig = moe.apply_moe
+
+    def patched(params, x, cfg, **kw):
+        x = C(x, "batch", None, None)     # pin tokens data-local, seq whole
+        return orig(params, x, cfg, **kw)
+    moe.apply_moe = patched
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch:shape, e.g. qwen2.5-32b:prefill_32k")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    arch, shape = args.cell.split(":")
+    rules = apply_variant(args.variant)
+
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                   out_dir=RESULTS, save_hlo=True, rules=rules,
+                   tag=f"__{args.variant}")
+    rf = rec.get("roofline", {})
+    print(json.dumps({
+        "cell": rec["cell"], "variant": args.variant,
+        "status": rec["status"],
+        "error": rec.get("error"),
+        "compute_s": rf.get("compute_s"),
+        "memory_s": rf.get("memory_s"),
+        "collective_s": rf.get("collective_s"),
+        "dominant": rf.get("dominant"),
+        "by_collective": rf.get("by_collective"),
+        "useful_ratio": rf.get("useful_ratio"),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(HLO shapes post-SPMD are per-device, so the per-chip division of the
+assignment formulas is already applied.)  Also reports MODEL_FLOPS =
+6ND / 2ND and its ratio to compiled FLOPs, the dominant term, and a
+suggested lever.
+
+Usage:  PYTHONPATH=src python -m repro.analysis.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+from typing import Optional
+
+# --- hardware constants (v5e-class target; see assignment) ---------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def roofline_from_hlo_text(text: str, *, arch: str, shape_name: str,
+                           n_devices: int) -> dict:
+    from repro.analysis.hlo import analyze_hlo_text
+    from repro.config import SHAPES, get_model_config
+    from repro.analysis.flops import model_flops, attention_flops
+
+    cost = analyze_hlo_text(text)
+    cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.bytes / HBM_BW
+    collective_s = cost.collective_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    mf_per_dev = mf / n_devices
+    hlo_flops = max(cost.flops, 1.0)
+    af = attention_flops(cfg, shape) / n_devices
+
+    bound_s = max(terms.values())
+    # roofline fraction: useful model FLOPs per device per "roofline second"
+    roofline_frac = (mf_per_dev / PEAK_FLOPS) / bound_s if bound_s else 0.0
+
+    return {
+        "hlo_flops_per_dev": cost.flops,
+        "hlo_bytes_per_dev": cost.bytes,
+        "collective_bytes_per_dev": cost.collective_bytes,
+        "by_collective": cost.by_collective,
+        "top_collectives": cost.top_collectives[:8],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_dev": mf_per_dev,
+        "attn_flops_per_dev": af,
+        "useful_ratio": mf_per_dev / hlo_flops,
+        "roofline_fraction": roofline_frac,
+    }
+
+
+def kernel_adjusted_terms(hlo_text: str, *, arch: str, shape_name: str,
+                          n_devices: int) -> dict:
+    """Substitute the measured reference-attention loop traffic with the
+    Pallas kernel's streaming-traffic model (paper T1/T2 on TPU).
+
+    The reference implementation materializes (block_q x block_kv) f32
+    score chunks in HBM each scan step; the kernel keeps scores/stats in
+    VMEM and streams Q,K,V,O exactly once.  This routine (a) measures the
+    attention scan loops' bytes/flops in the compiled artifact (nested
+    whiles whose bodies contain exponentials + >=2 dots, including inside
+    fusions), (b) replaces their bytes with Q+K+V+O streaming traffic and
+    their FLOPs with the causal-skip exact count, (c) leaves everything
+    else untouched.
+    """
+    import re as _re
+    from repro.analysis import hlo as H
+    from repro.config import SHAPES, get_model_config
+    from repro.analysis.flops import attention_flops
+
+    comps, entry = H.parse_hlo(hlo_text)
+    memo: dict = {}
+
+    def _whiles(comp):
+        out = []
+        for inst in comp.instructions:
+            if inst.opcode != "while":
+                continue
+            mb = _re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+            mc = _re.search(r"condition=%?([\w\.\-]+)", inst.attrs)
+            t = H.infer_trip_count(comps[mc.group(1)], comps) \
+                if mc and mc.group(1) in comps else 1
+            if mb:
+                out.append((mb.group(1), t))
+        return out
+
+    def _is_attention_body(name):
+        comp = comps.get(name)
+        if comp is None:
+            return False
+        ndots, has_exp = 0, False
+        stack = [comp]
+        seen = set()
+        while stack:
+            c = stack.pop()
+            if c.name in seen:
+                continue
+            seen.add(c.name)
+            for i in c.instructions:
+                if i.opcode == "dot":
+                    ndots += 1
+                if i.opcode == "exponential":
+                    has_exp = True
+                for called in i.called():
+                    if called in comps:
+                        stack.append(comps[called])
+        return has_exp and ndots >= 2
+
+    attn_bytes = 0.0
+    attn_flops = 0.0
+    for body, trips in _whiles(comps[entry]):
+        for b2, t2 in _whiles(comps[body]):
+            if _is_attention_body(b2):
+                c = H.computation_cost(b2, comps, dict(memo))
+                attn_bytes += c.bytes * t2 * trips
+                attn_flops += c.flops * t2 * trips
+
+    base = roofline_from_hlo_text(hlo_text, arch=arch,
+                                  shape_name=shape_name,
+                                  n_devices=n_devices)
+    cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+    # kernel streaming traffic per device (bf16 in, bf16 out)
+    b_loc = max(shape.global_batch // 16, 1)
+    sq = shape.seq_len // 16 if shape.kind != "decode" else 1
+    layers = sum(1 for k in cfg.blocks() if k not in ("mlstm", "slstm"))
+    per_layer = (2 * b_loc * cfg.num_heads * sq * cfg.head_dim * 2        # Q+O
+                 + 2 * b_loc * cfg.num_kv_heads * shape.seq_len
+                 * cfg.head_dim * 2)                                      # K+V
+    kern_bytes = per_layer * layers
+    kern_flops = attention_flops(cfg, shape) / n_devices
+    adj = dict(base)
+    adj["memory_s"] = (base["hlo_bytes_per_dev"] - attn_bytes
+                       + kern_bytes) / HBM_BW
+    adj["compute_s"] = (base["hlo_flops_per_dev"] - attn_flops
+                        + kern_flops) / PEAK_FLOPS
+    adj["attn_loop_bytes_measured"] = attn_bytes
+    adj["attn_loop_flops_measured"] = attn_flops
+    adj["kernel_bytes_model"] = kern_bytes
+    terms = {k: adj[k] for k in ("compute_s", "memory_s", "collective_s")}
+    adj["dominant"] = max(terms, key=terms.get)
+    bound = max(terms.values())
+    adj["roofline_fraction"] = (adj["model_flops_per_dev"] / PEAK_FLOPS
+                                / bound) if bound else 0.0
+    return adj
+
+
+def lever(rec: dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    r = rec.get("roofline", rec)
+    d = r.get("dominant")
+    if d == "collective_s":
+        top = r.get("by_collective", {})
+        worst = max(top, key=top.get) if top else "all-gather"
+        return (f"dominant collective is {worst} "
+                f"({top.get(worst, 0)/1e6:.0f} MB/dev): reduce via weight-"
+                "stationary sharding, chunked overlap (T3), or smaller "
+                "model-axis factor")
+    if d == "memory_s":
+        return ("HBM-bound: increase arithmetic intensity -- fuse attention "
+                "(larger level-1 tiles), widen per-chip batch, or quantize "
+                "KV/weights")
+    return ("compute-bound: close the useful-FLOPs gap (remat recompute, "
+            "causal-skip) and raise MXU utilization via 128-aligned tiles")
+
+
+def load_records(dir_: str):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_table(recs, *, mesh: Optional[str] = None) -> str:
+    rows = []
+    hdr = (f"{'cell':52s} {'status':8s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>5s} {'useful':>7s} {'roofl%':>7s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        cell = r["cell"]
+        if r["status"] != "ok":
+            rows.append(f"{cell:52s} {r['status']:8s} "
+                        f"{r.get('reason', r.get('error', ''))[:60]}")
+            continue
+        rf = r.get("roofline")
+        if not rf:
+            rows.append(f"{cell:52s} ok        (no roofline: "
+                        f"{r.get('roofline_error', '?')})")
+            continue
+        dom = {"compute_s": "comp", "memory_s": "mem",
+               "collective_s": "coll"}[rf["dominant"]]
+        rows.append(
+            f"{cell:52s} {'ok':8s} {rf['compute_s']:9.4f} "
+            f"{rf['memory_s']:9.4f} {rf['collective_s']:9.4f} {dom:>5s} "
+            f"{rf['useful_ratio']:7.3f} {100*rf['roofline_fraction']:7.2f}")
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--reparse", action="store_true",
+                    help="re-run the HLO parser on stored .hlo.gz files")
+    args = ap.parse_args(argv)
+    recs = load_records(args.dir)
+    if args.reparse:
+        for r in recs:
+            if r.get("hlo") and os.path.exists(r["hlo"]):
+                with gzip.open(r["hlo"], "rt") as f:
+                    text = f.read()
+                r["roofline"] = roofline_from_hlo_text(
+                    text, arch=r["arch"], shape_name=r["shape"],
+                    n_devices=r.get("n_devices", 256))
+                with open(os.path.join(
+                        args.dir, r["cell"] + ".json"), "w") as f:
+                    json.dump(r, f, indent=1)
+    print(render_table(recs))
+    for r in recs:
+        if r.get("status") == "ok" and r.get("roofline"):
+            print(f"{r['cell']}: {lever(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""Configuration system for the repro framework.
+
+Three layers of config:
+  * ModelConfig    -- architecture definition (one per --arch).
+  * ParallelConfig -- mesh + sharding + paper-technique toggles.
+  * ShapeConfig    -- workload shape (one per assigned input-shape set).
+
+Configs are plain frozen dataclasses so they hash and can be closed over by
+jit.  ``repro.configs`` registers one ModelConfig per assigned architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/lm.py.  A model is a (possibly repeating)
+# pattern of these:
+#   attn        -- pre-norm GQA attention + MLP (dense transformer layer)
+#   attn_local  -- same but sliding-window attention
+#   moe         -- attention + mixture-of-experts FFN
+#   mlstm       -- xLSTM matrix-LSTM block (no separate FFN)
+#   slstm       -- xLSTM scalar-LSTM block
+#   hymba       -- parallel attention + mamba heads sharing one residual
+#   hymba_local -- hymba with sliding-window attention heads
+BLOCK_KINDS = (
+    "attn", "attn_local", "moe", "mlstm", "slstm", "hymba", "hymba_local",
+)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # Per-layer block pattern.  ``block_pattern`` is tiled/truncated to
+    # ``num_layers``; default is all-"attn".
+    block_pattern: tuple = ("attn",)
+
+    # --- attention options -------------------------------------------------
+    attention_impl: str = "reference"   # reference | pallas (TPU only)
+    causal: bool = True
+    qkv_bias: bool = False
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    window_size: Optional[int] = None   # for *_local blocks
+    rope_type: str = "rope"             # rope | mrope | none
+    rope_theta: float = 10_000.0
+    mrope_sections: tuple = (16, 24, 24)  # M-RoPE split of head_dim//2
+
+    # --- norms / mlp --------------------------------------------------------
+    norm_type: str = "rmsnorm"          # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    mlp_type: str = "swiglu"            # swiglu | geglu | gelu
+    post_norm: bool = False             # gemma2-style post-block norms
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dff: int = 0                    # per-expert hidden (0 -> use d_ff)
+
+    # --- SSM / recurrent ----------------------------------------------------
+    ssm_state_size: int = 16            # mamba state (hymba)
+    mlstm_proj_factor: float = 2.0      # xLSTM up-projection factor
+    conv_kernel: int = 4                # mamba local conv width
+
+    # --- encoder-decoder (whisper) ------------------------------------------
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500             # audio frames after conv stub
+    modality: str = "text"              # text | audio_stub | vision_stub
+
+    # --- embeddings / dtypes -------------------------------------------------
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    embed_scale: bool = False           # gemma-style sqrt(d) embedding scale
+
+    # ------------------------------------------------------------------
+    def blocks(self) -> tuple:
+        """The per-layer block-kind tuple, length == num_layers."""
+        pat = self.block_pattern
+        reps = (self.num_layers + len(pat) - 1) // len(pat)
+        return tuple((pat * reps)[: self.num_layers])
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def expert_dff(self) -> int:
+        return self.moe_dff or self.d_ff
+
+    def param_count(self) -> int:
+        """Total parameter count (approximate analytic model, matches the
+        constructed pytree to within embedding-tying details)."""
+        from repro.analysis.flops import param_count
+        return param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.analysis.flops import param_count
+        return param_count(self, active_only=True)
+
+    def is_subquadratic(self) -> bool:
+        """True if no block is full (global) quadratic attention, i.e. the
+        arch is eligible for the long_500k shape."""
+        quad = {"attn", "moe"}
+        if self.is_encoder_decoder:
+            return False
+        return not any(b in quad for b in self.blocks())
+
+
+# ---------------------------------------------------------------------------
+# Parallel / distribution configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    # Mesh shape.  pods * data * model == number of devices.
+    pods: int = 1
+    data: int = 1
+    model: int = 1
+
+    # Attention distribution mode on the `model` axis:
+    #   context -- Q sharded along seq, GQA KV gathered (train/prefill);
+    #              decode shards the KV cache along cache-seq + LSE merge.
+    #   replicated -- attention unsharded (tiny models / smoke tests).
+    attn_mode: str = "context"
+
+    # --- paper T3: tiling-AllReduce ----------------------------------------
+    tiled_allreduce: bool = False
+    ar_chunks: int = 4
+    first_chunk_frac: float = 0.5       # paper: make the first block smaller
+
+    # --- memory/perf knobs ---------------------------------------------------
+    remat: str = "selective"            # none | full | selective
+    scan_layers: bool = True            # lax.scan over homogeneous blocks
+    grad_compression: str = "none"      # none | int8_ef
+    microbatches: int = 1               # gradient accumulation steps
+    seq_shard_activations: bool = True  # Megatron-SP activation layout
+
+    # --- paper T4: CPU-GPU cooperative offload -------------------------------
+    offload_kv: bool = False
+    host_memory_gb: float = 512.0
+    device_memory_gb: float = 16.0      # v5e HBM
+    pcie_gbps: float = 32.0             # host<->device bidirectional
+
+    # pipeline parallelism over the pod axis (optional feature)
+    pipeline_stages: int = 1
+
+    @property
+    def dp(self) -> int:
+        return self.pods * self.data
+
+    def mesh_shape(self):
+        if self.pods > 1:
+            return (self.pods, self.data, self.model)
+        return (self.data, self.model)
+
+    def mesh_axes(self):
+        if self.pods > 1:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+    def dp_axes(self):
+        return ("pod", "data") if self.pods > 1 else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Workload shapes (assigned input-shape set)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+    gen_tokens: int = 1            # decode steps per serve_step call
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Training / serving runtime config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    checkpoint_every: int = 100
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq_len: int = 4096
+    temperature: float = 1.0
+    top_k: int = 0                 # 0 = greedy
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    parallel: ParallelConfig = ParallelConfig()
+    shape: ShapeConfig = SHAPES["train_4k"]
+    train: TrainConfig = TrainConfig()
+    serve: ServeConfig = ServeConfig()
+
+
+# ---------------------------------------------------------------------------
+# Registry + CLI
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(name: str, fn: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[name] = fn
+
+
+def available_archs() -> Sequence[str]:
+    _load_builtin_configs()
+    return sorted(_REGISTRY)
+
+
+def get_model_config(name: str) -> ModelConfig:
+    _load_builtin_configs()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {', '.join(sorted(_REGISTRY))}")
+    return _REGISTRY[name]()
+
+
+_LOADED = False
+
+
+def _load_builtin_configs() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    import repro.configs  # noqa: F401  (imports register all built-ins)
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """A tiny config of the same family for CPU smoke tests.
+
+    Keeps the block pattern (truncated), GQA-ness, and every structural
+    feature; shrinks widths/layers/vocab.
+    """
+    n_layers = min(cfg.num_layers, 2 if not cfg.is_encoder_decoder else 2)
+    kv = min(cfg.num_kv_heads, 2)
+    q_per_kv = max(1, cfg.num_heads // cfg.num_kv_heads)
+    heads = kv * q_per_kv
+    head_dim = 16
+    updates = dict(
+        num_layers=n_layers,
+        d_model=heads * head_dim,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=head_dim,
+        d_ff=4 * heads * head_dim if cfg.d_ff else 0,
+        vocab_size=256,
+        window_size=32 if cfg.window_size else None,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    if cfg.num_experts:
+        updates.update(num_experts=4,
+                       num_experts_per_tok=min(2, cfg.num_experts_per_tok),
+                       moe_dff=64)
+    if cfg.is_encoder_decoder:
+        updates.update(encoder_layers=2, encoder_seq=16)
+    if cfg.mrope_sections and cfg.rope_type == "mrope":
+        updates.update(mrope_sections=(2, 3, 3))
+    return replace(cfg, **updates)
+
+
+def describe(cfg: ModelConfig) -> str:
+    n = cfg.param_count()
+    return (f"{cfg.name}: {cfg.family} {cfg.num_layers}L d={cfg.d_model} "
+            f"H={cfg.num_heads}/{cfg.num_kv_heads} ff={cfg.d_ff} "
+            f"V={cfg.vocab_size} params={n/1e9:.2f}B")

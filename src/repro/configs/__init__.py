@@ -1,0 +1,32 @@
+"""Built-in architecture configs (assigned pool + the paper's own models).
+
+Each module defines ``config() -> ModelConfig`` and registers itself.
+"""
+from repro.configs import (  # noqa: F401
+    xlstm_125m,
+    qwen25_32b,
+    phi3_mini_3p8b,
+    gemma2_2b,
+    stablelm_3b,
+    grok1_314b,
+    qwen3_moe_30b_a3b,
+    hymba_1p5b,
+    qwen2_vl_72b,
+    whisper_small,
+    paper_models,
+)
+from repro.config import SHAPES  # noqa: F401
+
+# Canonical id -> module-registered name mapping (ids use dashes).
+ASSIGNED_ARCHS = (
+    "xlstm-125m",
+    "qwen2.5-32b",
+    "phi3-mini-3.8b",
+    "gemma2-2b",
+    "stablelm-3b",
+    "grok-1-314b",
+    "qwen3-moe-30b-a3b",
+    "hymba-1.5b",
+    "qwen2-vl-72b",
+    "whisper-small",
+)

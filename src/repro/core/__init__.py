@@ -1,0 +1,9 @@
+"""The paper's contribution: FastAttention core (T1-T4).
+
+T1 two-level tiling      -> kernels/fastattn + core/tiling.py
+T2 tiling-mask           -> core/tiling_mask.py
+T3 tiling-AllReduce      -> core/tiled_allreduce.py
+T4 CPU-GPU cooperative   -> core/offload.py
+beyond-paper CP decode   -> core/distributed_decode.py
+"""
+from repro.core.fastattention import fast_attention, fast_attention_decode  # noqa: F401

@@ -1,0 +1,106 @@
+"""Context-parallel decode: KV cache sharded along its sequence dimension.
+
+Beyond-paper extension (DESIGN.md §2.6): the paper tiles the KV sequence
+within one NPU; here the same online-softmax decomposition is promoted to
+the distributed level.  Each `model`-axis shard holds a contiguous slice of
+the KV cache, runs flash-decode locally with a log-sum-exp, and partial
+outputs merge exactly:
+
+    m  = pmax(lse_i)
+    out = psum(exp(lse_i - m) * out_i) / psum(exp(lse_i - m) * l_i ... )
+
+(the denominator folds into the weights since out_i is already normalized
+by its local softmax sum).
+
+This removes the per-device KV-cache replication that otherwise caps
+context length -- the distributed analogue of the paper's 16K -> 256K
+claim -- and is what makes decode_32k@b128 and long_500k fit on v5e.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def _local_decode_with_lse(q, k, v, start, stop, *, window, softcap, scale,
+                           global_len):
+    """Decode attention over a local KV shard covering [start, stop).
+
+    q: (B, Hq, D); k/v: (B, Hkv, S_local, D); returns (out, lse) where out
+    is locally softmax-normalized and lse the local log-sum-exp.
+    """
+    b, hq, d = q.shape
+    hkv, s_local = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if n_rep > 1:
+        kf = jnp.repeat(kf, n_rep, axis=1)
+        vf = jnp.repeat(vf, n_rep, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kf) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = start + jnp.arange(s_local)[None, None, :]
+    glen = jnp.asarray(global_len).reshape(-1, 1, 1)
+    valid = pos < glen
+    if window is not None:
+        valid = valid & (pos >= glen - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(jnp.where(valid, p, 0.0), axis=-1)
+    l_safe = jnp.where(l == 0, 1.0, l)
+    out = jnp.einsum("bhk,bhkd->bhd", p, vf) / l_safe[..., None]
+    lse = jnp.where(l == 0, NEG_INF, m + jnp.log(l_safe))
+    return out, lse
+
+
+def cp_decode_body(q, k_shard, v_shard, kv_len, *, axis_name: str,
+                   window: Optional[int] = None,
+                   softcap: Optional[float] = None,
+                   scale: Optional[float] = None,
+                   global_seq: int = 0):
+    """shard_map body: q replicated, k/v sharded along seq on axis_name."""
+    idx = jax.lax.axis_index(axis_name)
+    s_local = k_shard.shape[2]
+    start = idx * s_local
+    out, lse = _local_decode_with_lse(
+        q, k_shard, v_shard, start, start + s_local, window=window,
+        softcap=softcap, scale=scale, global_len=kv_len)
+    m = jax.lax.pmax(lse, axis_name)
+    w = jnp.exp(lse - m)                                   # (B, Hq)
+    num = jax.lax.psum(out * w[..., None], axis_name)
+    den = jax.lax.psum(w, axis_name)
+    den = jnp.where(den == 0, 1.0, den)
+    return (num / den[..., None]).astype(q.dtype)
+
+
+def context_parallel_decode(mesh, q, k_cache, v_cache, kv_len, *,
+                            axis_name: str = "model",
+                            batch_axes=("data",),
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None):
+    """Distributed decode attention.
+
+    q: (B, Hq, D); caches (B, Hkv, S, D) -- S sharded over ``axis_name``,
+    B sharded over ``batch_axes``.  Returns (B, Hq, D).
+    """
+    body = functools.partial(
+        cp_decode_body, axis_name=axis_name, window=window,
+        softcap=softcap, scale=scale, global_seq=k_cache.shape[2])
+    ba = tuple(a for a in batch_axes if a in mesh.axis_names)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ba, None, None), P(ba, None, axis_name, None),
+                  P(ba, None, axis_name, None), P(ba)),
+        out_specs=P(ba, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, kv_len)

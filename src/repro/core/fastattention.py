@@ -1,0 +1,96 @@
+"""Public FastAttention API used by the model layers.
+
+Model layers use (B, S, H, D) activations; kernels use (B, H, S, D).
+This facade handles the transposition, implementation dispatch and the
+serve-time (decode) path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fast_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True,
+                   window: Optional[int] = None,
+                   softcap: Optional[float] = None,
+                   scale: Optional[float] = None,
+                   q_offset: int = 0,
+                   impl: str = "reference",
+                   block_q: int = 256,
+                   block_kv1: int = 1024,
+                   block_kv2: int = 256) -> jax.Array:
+    """Attention over (B, S, H, D) tensors.  Returns (B, Sq, Hq, D)."""
+    from repro.kernels.fastattn.ops import fastattn
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    out = fastattn(qT, kT, vT, causal, window, softcap, scale, q_offset,
+                   block_q, block_kv1, block_kv2, impl)
+    return out.transpose(0, 2, 1, 3)
+
+
+def fast_attention_decode(q: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, kv_len: jax.Array, *,
+                          window: Optional[int] = None,
+                          softcap: Optional[float] = None,
+                          scale: Optional[float] = None,
+                          impl: str = "reference",
+                          block_kv: int = 512,
+                          layout: str = "bshd") -> jax.Array:
+    """Single-token decode attention.
+
+    q: (B, 1, Hq, D); caches (B, S, Hkv, D) ["bshd"] or (B, Hkv, S, D)
+    ["bhsd", head-major: no transpose before the contraction]; kv_len (B,).
+    Returns (B, 1, Hq, D).
+
+    The reference path works IN PLACE on the (B, S, Hkv, D) bf16 cache --
+    no transpose, no GQA expansion, no f32 copy; einsums accumulate in f32
+    (decode is HBM-bound: every extra cache copy doubles the memory term).
+    The sequence dim may carry the `kv_seq -> model` sharding; XLA then
+    decomposes the max/sum/PV reductions into the LSE-merge collectives of
+    core/distributed_decode.py.
+    """
+    if impl in ("pallas", "interpret"):
+        from repro.kernels.flash_decode.ops import flash_decode
+        qT = q.transpose(0, 2, 1, 3)
+        if layout == "bhsd":
+            kT, vT = k_cache, v_cache
+        else:
+            kT = k_cache.transpose(0, 2, 1, 3)
+            vT = v_cache.transpose(0, 2, 1, 3)
+        out = flash_decode(qT[:, :, 0], kT, vT, kv_len,
+                           window=window, softcap=softcap, scale=scale,
+                           block_kv=block_kv,
+                           interpret=(impl == "interpret"))[:, :, None]
+        return out.transpose(0, 2, 1, 3)
+
+    b, _, hq, d = q.shape
+    if layout == "bhsd":
+        hkv, s = k_cache.shape[1], k_cache.shape[2]
+    else:
+        s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    kv_eq = "bhgd,bhsd->bhgs" if layout == "bhsd" else "bhgd,bshd->bhgs"
+    logits = jnp.einsum(kv_eq, qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(s)[None, None, None, :]
+    lens = jnp.asarray(kv_len).reshape(b, 1, 1, 1)
+    mask = pos < lens
+    if window is not None:
+        mask = mask & (pos >= lens - window)
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = (p / jnp.where(l == 0, 1.0, l)).astype(k_cache.dtype)
+    pv_eq = "bhgs,bhsd->bhgd" if layout == "bhsd" else "bhgs,bshd->bhgd"
+    out = jnp.einsum(pv_eq, p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,253 @@
+"""Paper §4.4: fine-grained CPU-GPU (host-TPU) cooperative strategy (T4).
+
+Implements the paper's closed-form layer split (Eq. 15-20): the first
+``L_CPU`` layers keep their KV cache in host memory and run decode
+attention ON THE HOST (moving compute to the data); the remaining
+``L_GPU`` layers keep KV on-device.  Only the fixed-size Q/attention-output
+cross PCIe each decode step -- never the KV cache, which is what makes
+this 1.27-1.48x faster than classical offloading in the paper's Table 3.
+
+The planner and latency model are exact re-implementations of the paper's
+formulas with hardware constants as parameters; the execution engine uses
+JAX's CPU backend as the host and works on any device topology.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ParallelConfig
+
+
+@dataclass(frozen=True)
+class OffloadPlan:
+    l_gpu: int                  # layers with on-device KV
+    l_cpu: int                  # layers with host KV + host attention
+    bytes_weights: int          # M_w   (total model weights)
+    bytes_kv_layer: int         # M_kv  (per layer, per device)
+    bytes_mid: int              # M_mid (intermediate, per device)
+    bytes_vocab: int            # M_vocab
+    device_budget: int          # M_GPU
+    needs_offload: bool
+
+    def summary(self) -> str:
+        return (f"L_GPU={self.l_gpu} L_CPU={self.l_cpu} "
+                f"(weights={self.bytes_weights/2**30:.2f}GiB "
+                f"kv/layer/dev={self.bytes_kv_layer/2**20:.1f}MiB "
+                f"mid={self.bytes_mid/2**20:.1f}MiB "
+                f"offload={'yes' if self.needs_offload else 'no'})")
+
+
+def plan_offload(cfg: ModelConfig, *, batch: int, seq_len: int,
+                 gen_len: int, n_devices: int,
+                 device_memory_gb: float = 16.0,
+                 dtype_bytes: int = 2) -> OffloadPlan:
+    """Paper Eq. 15-20 generalized to arbitrary architectures.
+
+      L_GPU = (M_GPU - M_w/n - M_mid - M_vocab) / M_kv ;  L_CPU = L - L_GPU
+
+    M_w uses the real per-layer parameter model (incl. GQA/MoE) instead of
+    the paper's 8H1^2 + 4H1H2 (which assumes MHA + 2-matrix FFN); for MHA
+    dense models the two coincide.
+    """
+    from repro.analysis.flops import param_count
+    n = n_devices
+    L = cfg.num_layers
+    h1 = cfg.d_model
+    m_vocab = cfg.vocab_size * h1 * dtype_bytes
+    n_embed_mats = 1 if cfg.tie_embeddings else 2
+    m_w = (param_count(cfg) - n_embed_mats * cfg.vocab_size * h1) * dtype_bytes
+    # per-layer KV on ONE device (paper Eq. 18; kv heads, not H1, for GQA)
+    m_kv = 2 * dtype_bytes * batch * cfg.kv_dim * (seq_len + gen_len) / n
+    # intermediate activations (paper Eq. 19)
+    m_mid = 3 * dtype_bytes * batch * seq_len * h1 / n
+    m_gpu = device_memory_gb * 2 ** 30
+
+    total_kv = m_kv * L
+    fits = m_w / n + m_mid + m_vocab + total_kv <= m_gpu
+    if fits:
+        l_gpu = L
+    else:
+        l_gpu = int((m_gpu - m_w / n - m_mid - m_vocab) / m_kv)
+        l_gpu = max(0, min(L, l_gpu))
+    return OffloadPlan(
+        l_gpu=l_gpu, l_cpu=L - l_gpu,
+        bytes_weights=int(m_w), bytes_kv_layer=int(m_kv),
+        bytes_mid=int(m_mid), bytes_vocab=int(m_vocab),
+        device_budget=int(m_gpu), needs_offload=not fits)
+
+
+@dataclass(frozen=True)
+class OffloadLatencyModel:
+    """Analytic latency model for the Table-3 comparison.
+
+    Calibrated to the paper's Table 3 measurements:
+      * CPU_Calc 37.74 ms @ B=1, S=256K, H1=5120 -> ~140 GFLOP/s host;
+      * Upload 50.81 ms for the 671 MB per-device KV slice -> ~13.2 GB/s
+        EFFECTIVE PCIe (theoretical 32 GB/s; the paper itself notes
+        "real-world bandwidth ... may prevent it from reaching the peak").
+    """
+    pcie_gbps: float = 13.2          # effective PCIe (paper-measured)
+    host_gflops: float = 140.0       # sustained host attention GFLOP/s
+    device_tflops: float = 197.0     # device bf16 peak
+
+    def classical_upload_s(self, kv_bytes_layer: float) -> float:
+        """Classical offloading: upload the layer's KV cache, then compute."""
+        return kv_bytes_layer / (self.pcie_gbps * 1e9)
+
+    def coop_offupload_s(self, batch: int, q_dim: int,
+                         dtype_bytes: int = 2) -> float:
+        """Cooperative: ship QKV (new token) down + result up -- O(B*H)."""
+        qkv = 3 * batch * q_dim * dtype_bytes
+        out = batch * q_dim * dtype_bytes
+        return (qkv + out) / (self.pcie_gbps * 1e9)
+
+    def host_attention_s(self, batch: int, kv_len: int, q_dim: int) -> float:
+        flops = 2 * 2 * batch * kv_len * q_dim          # QK^T + PV
+        return flops / (self.host_gflops * 1e9)
+
+    def device_attention_s(self, batch: int, kv_len: int, q_dim: int) -> float:
+        flops = 2 * 2 * batch * kv_len * q_dim
+        # decode attention is HBM-bound; charge bytes instead of flops
+        bytes_ = 2 * batch * kv_len * q_dim * 2
+        return max(flops / (self.device_tflops * 1e12),
+                   bytes_ / (819e9))
+
+
+def table3_row(cfg: ModelConfig, seq_len: int, *, batch: int = 1,
+               n_devices: int = 8,
+               model: OffloadLatencyModel = OffloadLatencyModel(),
+               device_memory_gb: float = 16.0):
+    """One row of the paper's Table 3 (per-layer attention latency)."""
+    plan = plan_offload(cfg, batch=batch, seq_len=seq_len, gen_len=64,
+                        n_devices=n_devices,
+                        device_memory_gb=device_memory_gb)
+    kv_dim = cfg.kv_dim
+    gpu_calc = model.device_attention_s(batch, seq_len, cfg.q_dim)
+    if not plan.needs_offload:
+        return dict(seq=seq_len, offload=False, gpu_calc_s=gpu_calc,
+                    classical_total_s=gpu_calc, coop_total_s=gpu_calc,
+                    l_cpu=0, l_gpu=plan.l_gpu)
+    upload = model.classical_upload_s(plan.bytes_kv_layer)
+    cpu_calc = model.host_attention_s(batch, seq_len, cfg.q_dim)
+    off_up = model.coop_offupload_s(batch, cfg.q_dim)
+    return dict(seq=seq_len, offload=True,
+                classical_upload_s=upload,
+                gpu_calc_s=gpu_calc,
+                classical_total_s=upload + gpu_calc,
+                coop_cpu_calc_s=cpu_calc,
+                coop_offupload_s=off_up,
+                coop_total_s=cpu_calc + off_up,
+                speedup=(upload + gpu_calc) / (cpu_calc + off_up),
+                l_cpu=plan.l_cpu, l_gpu=plan.l_gpu)
+
+
+def max_context_length(cfg: ModelConfig, *, batch: int, n_devices: int,
+                       device_memory_gb: float, host_memory_gb: float,
+                       dtype_bytes: int = 2, gen_len: int = 64) -> dict:
+    """Max supported S without vs with the cooperative strategy (the
+    paper's 16K -> 256K headline on 8xV100)."""
+    def fits_device_only(s):
+        p = plan_offload(cfg, batch=batch, seq_len=s, gen_len=gen_len,
+                         n_devices=n_devices,
+                         device_memory_gb=device_memory_gb,
+                         dtype_bytes=dtype_bytes)
+        return not p.needs_offload
+
+    def fits_coop(s):
+        p = plan_offload(cfg, batch=batch, seq_len=s, gen_len=gen_len,
+                         n_devices=n_devices,
+                         device_memory_gb=device_memory_gb,
+                         dtype_bytes=dtype_bytes)
+        host_kv = p.bytes_kv_layer * p.l_cpu * n_devices
+        return (p.l_gpu >= 0 and
+                host_kv <= host_memory_gb * 2 ** 30)
+
+    def bisect(pred, lo=1024, hi=1 << 24):
+        if not pred(lo):
+            return 0
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if pred(mid):
+                lo = mid
+            else:
+                hi = mid - 1
+        return lo
+
+    return dict(device_only=bisect(fits_device_only),
+                cooperative=bisect(fits_coop))
+
+
+# ---------------------------------------------------------------------------
+# Execution engine: host-resident KV + host attention
+# ---------------------------------------------------------------------------
+
+class HostOffloadEngine:
+    """Runtime for T4.  Layers < l_cpu keep KV on the host and compute
+    decode attention there; the rest stay on device.
+
+    On this container host == device == CPU backend, so the data path is
+    exercised end-to-end while transfer latencies come from the analytic
+    model.  On a real TPU pod, `host_device` is the colocated CPU backend
+    and `device_put` crosses PCIe.
+    """
+
+    def __init__(self, cfg: ModelConfig, plan: OffloadPlan, *,
+                 max_batch: int, max_seq: int,
+                 host_device: Optional[jax.Device] = None):
+        self.cfg = cfg
+        self.plan = plan
+        self.host = host_device or jax.devices("cpu")[0]
+        kvshape = (max_batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        self._host_kv = {
+            li: (jnp.zeros(kvshape, jnp.float32),
+                 jnp.zeros(kvshape, jnp.float32))
+            for li in range(plan.l_cpu)
+        }
+        self._host_attn = jax.jit(self._attn, device=self.host)
+
+    @staticmethod
+    def _attn(q, k, v, kv_len):
+        from repro.kernels.fastattn.ref import decode_reference
+        return decode_reference(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), kv_len).transpose(0, 2, 1, 3)
+
+    def is_host_layer(self, layer_idx: int) -> bool:
+        return layer_idx < self.plan.l_cpu
+
+    def prefill_offload(self, layer_idx: int, k: jax.Array, v: jax.Array):
+        """Async KV offload after the prefill KV projection (paper step 3)."""
+        if not self.is_host_layer(layer_idx):
+            return
+        k_h = jax.device_put(k, self.host)
+        v_h = jax.device_put(v, self.host)
+        b, s = k.shape[0], k.shape[1]
+        kh, vh = self._host_kv[layer_idx]
+        kh = jax.lax.dynamic_update_slice(kh, k_h.astype(kh.dtype),
+                                          (0, 0, 0, 0))
+        vh = jax.lax.dynamic_update_slice(vh, v_h.astype(vh.dtype),
+                                          (0, 0, 0, 0))
+        self._host_kv[layer_idx] = (kh, vh)
+
+    def decode_append(self, layer_idx: int, k_new, v_new, pos: int):
+        kh, vh = self._host_kv[layer_idx]
+        k_h = jax.device_put(k_new, self.host).astype(kh.dtype)
+        v_h = jax.device_put(v_new, self.host).astype(vh.dtype)
+        kh = jax.lax.dynamic_update_slice(kh, k_h, (0, pos, 0, 0))
+        vh = jax.lax.dynamic_update_slice(vh, v_h, (0, pos, 0, 0))
+        self._host_kv[layer_idx] = (kh, vh)
+
+    def decode_attention(self, layer_idx: int, q, kv_len):
+        """Offload Q, compute attention on host, upload the result
+        (paper step 4: 'uses CPUs to finish the attention calculation ...
+        results will be uploaded to GPUs')."""
+        kh, vh = self._host_kv[layer_idx]
+        q_h = jax.device_put(q, self.host)
+        out = self._host_attn(q_h, kh, vh,
+                              jnp.asarray(kv_len, jnp.int32))
+        return jax.device_put(out, q.devices().pop())

@@ -1,0 +1,86 @@
+"""Two-level tiling planner (paper §4.1, adapted to TPU VMEM/MXU).
+
+The paper picks its first-level block size from the Ascend L1 buffer and
+its second-level block size from L0; we re-derive both from the TPU memory
+hierarchy: level 1 fills VMEM (minus double-buffering headroom), level 2
+aligns to the 128x128 MXU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# v5e-class constants (also used by analysis/roofline.py)
+VMEM_BYTES = 64 * 1024 * 1024       # usable VMEM budget per core (conservative)
+MXU_DIM = 128
+LANES = 128
+
+
+@dataclass(frozen=True)
+class TilingPlan:
+    block_q: int
+    block_kv1: int          # level-1: HBM -> VMEM macro block
+    block_kv2: int          # level-2: MXU-aligned sub tile
+    m_mask: int             # M of the (2M)^2 tiling-mask
+    vmem_bytes: int         # estimated VMEM working set
+
+    @property
+    def n_sub(self) -> int:
+        return self.block_kv1 // self.block_kv2
+
+
+def vmem_working_set(block_q: int, block_kv1: int, block_kv2: int,
+                     head_dim: int, dtype_bytes: int = 2) -> int:
+    """VMEM bytes for one grid step of the fastattn kernel.
+
+    Q block + double-buffered K/V macro blocks + f32 accumulators + M-mask.
+    """
+    mm = max(block_q, block_kv2)
+    q = block_q * head_dim * dtype_bytes
+    kv = 2 * 2 * block_kv1 * head_dim * dtype_bytes    # K,V double-buffered
+    acc = block_q * head_dim * 4
+    stats = 2 * block_q * LANES * 4
+    mask = (2 * mm) * (2 * mm)
+    out = block_q * head_dim * dtype_bytes * 2
+    return q + kv + acc + stats + mask + out
+
+
+def plan_two_level_tiling(seq_q: int, seq_kv: int, head_dim: int, *,
+                          dtype_bytes: int = 2,
+                          vmem_budget: int = VMEM_BYTES,
+                          max_block_q: int = 512,
+                          max_block_kv1: int = 4096) -> TilingPlan:
+    """Choose (block_q, block_kv1, block_kv2) for a problem shape.
+
+    Mirrors the paper's reasoning: grow the level-1 block until the memory
+    budget (here VMEM, there L1) is exhausted -- larger level-1 blocks mean
+    fewer pipeline synchronizations and better HBM bandwidth utilization --
+    while the level-2 block stays at the compute unit's native tile.
+    """
+    block_kv2 = MXU_DIM if head_dim >= 128 else 2 * MXU_DIM
+    block_q = min(max_block_q, _round_up(min(seq_q, 256), 8))
+    # grow level-1 block while it fits
+    block_kv1 = block_kv2
+    while (block_kv1 * 2 <= max_block_kv1
+           and block_kv1 * 2 <= _round_up(seq_kv, block_kv2)
+           and vmem_working_set(block_q, block_kv1 * 2, block_kv2,
+                                head_dim, dtype_bytes) <= vmem_budget):
+        block_kv1 *= 2
+    plan = TilingPlan(
+        block_q=block_q,
+        block_kv1=block_kv1,
+        block_kv2=block_kv2,
+        m_mask=max(block_q, block_kv2),
+        vmem_bytes=vmem_working_set(block_q, block_kv1, block_kv2,
+                                    head_dim, dtype_bytes),
+    )
+    return plan
+
+
+def sync_count(seq_kv: int, block: int) -> int:
+    """Number of pipeline boundaries ('synchronizations') for a KV pass --
+    the quantity the paper's level-1 enlargement minimizes."""
+    return (seq_kv + block - 1) // block
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m

@@ -1,0 +1,146 @@
+"""Paper §4.1 tiling-mask strategy (T2).
+
+Replaces the S x S ``attention_mask`` with a single (2M) x (2M) *M-mask*
+from which the *B-mask* of any ``bq x bk`` attention-score block can be
+recovered as a shifted slice, because a causal (or banded) mask block only
+depends on ``delta = q_start - kv_start``:
+
+    M[u, v] = (u >= v)                       (lower-triangular M-mask)
+    B[r, c] = (delta + r >= c)
+            = M[max(delta,0) + r, max(-delta,0) + c]     for |delta| < M
+
+Sliding-window (banded) masks are the AND of two shifted slices of the SAME
+M-mask:  visible(q,k) = (q >= k) & (q - k < w)
+                      = slice(M, delta)[r,c] & ~slice(M, delta - w)[r,c].
+
+Block classification drives the paper's two skip optimizations:
+  * SKIP (all-masked)  -> don't compute the block at all (~50% of Cube work
+    for causal attention);
+  * FULL (all-visible) -> skip the mask add (Vector-unit saving);
+  * PARTIAL            -> apply the sliced B-mask.
+
+Memory: an S=64K causal mask in fp16 is 8 GB; the M-mask for M=512 is
+(1024)^2 int8 = 1 MB (256 KB as bits) -- the paper's Table numbers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Block classifications.
+SKIP, PARTIAL, FULL = 0, 1, 2
+
+
+@functools.lru_cache(maxsize=8)
+def _m_mask_np(m: int) -> np.ndarray:
+    u = np.arange(2 * m)
+    return (u[:, None] >= u[None, :]).astype(np.int8)
+
+
+def make_m_mask(m: int, dtype=jnp.int8) -> jax.Array:
+    """The (2M, 2M) lower-triangular M-mask (paper Fig. 3)."""
+    return jnp.asarray(_m_mask_np(m), dtype=dtype)
+
+
+def bmask_offsets(delta, m: int, bq: int, bk: int):
+    """Start offsets of the B-mask slice inside the M-mask for shift delta."""
+    row0 = jnp.clip(delta, 0, 2 * m - bq)
+    col0 = jnp.clip(-delta, 0, 2 * m - bk)
+    return row0, col0
+
+
+def slice_bmask(m_mask: jax.Array, delta, bq: int, bk: int) -> jax.Array:
+    """Extract the (bq, bk) B-mask for ``delta = q_start - kv_start``.
+
+    Exact whenever the block is PARTIAL (|delta| < M); clamped otherwise
+    (callers must classify first -- SKIP/FULL blocks never consult the mask).
+    """
+    m = m_mask.shape[0] // 2
+    row0, col0 = bmask_offsets(delta, m, bq, bk)
+    return jax.lax.dynamic_slice(m_mask, (row0, col0), (bq, bk))
+
+
+def slice_band_bmask(m_mask: jax.Array, delta, window: int,
+                     bq: int, bk: int) -> jax.Array:
+    """B-mask for causal+sliding-window: slice(δ) & ~slice(δ - window)."""
+    causal = slice_bmask(m_mask, delta, bq, bk)
+    lower = slice_bmask(m_mask, delta - window, bq, bk)
+    return causal * (1 - lower)
+
+
+def classify_block(q_start, kv_start, bq: int, bk: int, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   kv_len=None):
+    """Classify a (bq, bk) score block as SKIP / PARTIAL / FULL.
+
+    Works on python ints or traced values.  ``kv_len`` optionally marks KV
+    padding (positions >= kv_len are masked).
+    """
+    q_end = q_start + bq - 1
+    kv_end = kv_start + bk - 1
+    full = True
+    skip = False
+    if causal:
+        delta = q_start - kv_start
+        skip = skip | (delta <= -bq) if not isinstance(skip, bool) or skip \
+            else (delta <= -bq)
+        full = full & (delta >= bk - 1)
+    if window is not None:
+        # visible requires k > q - w; fully masked if kv_end <= q_start - w
+        skip = skip | (kv_end <= q_start - window)
+        full = full & (kv_start >= q_end - window + 1)
+    if kv_len is not None:
+        skip = skip | (kv_start >= kv_len)
+        full = full & (kv_end < kv_len)
+    if isinstance(skip, (bool, np.bool_)):
+        return SKIP if skip else (FULL if full else PARTIAL)
+    return jnp.where(skip, SKIP, jnp.where(full, FULL, PARTIAL))
+
+
+class MaskSpec(NamedTuple):
+    """Static description of the mask pattern for a kernel launch."""
+    causal: bool = True
+    window: Optional[int] = None     # sliding window width (includes self)
+    q_offset: int = 0                # global position of q row 0 (decode)
+
+    def block_limits(self, n_q_blocks: int, n_kv_blocks: int,
+                     bq: int, bk: int, kv_len: int):
+        """Per-q-block [first, last] valid kv-block indices (numpy, static)."""
+        first = np.zeros(n_q_blocks, np.int64)
+        last = np.full(n_q_blocks, n_kv_blocks - 1, np.int64)
+        for qi in range(n_q_blocks):
+            q0 = self.q_offset + qi * bq
+            qe = q0 + bq - 1
+            if self.causal:
+                last[qi] = min(last[qi], qe // bk)
+            if self.window is not None:
+                first[qi] = max(first[qi], (q0 - self.window + 1) // bk)
+            last[qi] = min(last[qi], max((kv_len - 1) // bk, 0))
+            first[qi] = max(min(first[qi], last[qi]), 0)
+        return first, last
+
+
+def mask_memory_bytes(seq_len: int, dtype_bytes: int = 2) -> int:
+    """Memory of a dense S x S mask (the paper's 8 GB @ 64K example)."""
+    return seq_len * seq_len * dtype_bytes
+
+
+def m_mask_memory_bytes(m: int, dtype_bytes: int = 1) -> int:
+    return (2 * m) * (2 * m) * dtype_bytes
+
+
+def dense_mask(seq_q: int, seq_k: int, *, causal: bool = True,
+               window: Optional[int] = None, q_offset: int = 0) -> jax.Array:
+    """Reference dense mask (oracle for property tests)."""
+    q = jnp.arange(seq_q)[:, None] + q_offset
+    k = jnp.arange(seq_k)[None, :]
+    m = jnp.ones((seq_q, seq_k), jnp.bool_)
+    if causal:
+        m = m & (q >= k)
+    if window is not None:
+        m = m & (q - k < window)
+    return m

@@ -1,0 +1,1 @@
+from repro.kernels.fastattn.ops import fastattn  # noqa: F401

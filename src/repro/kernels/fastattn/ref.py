@@ -1,0 +1,190 @@
+"""Pure-jnp oracles for the FastAttention kernel.
+
+``standard_attention``  -- the paper's baseline: naive Softmax(QK^T/sqrt(d))V
+                           with a materialized dense mask (no fusion, no
+                           online softmax).
+``flash_reference``     -- chunked online-softmax attention with the same
+                           algorithmic structure (and numerics) as the Pallas
+                           kernel.  Differentiable; also serves as the
+                           model-side implementation for CPU dry-runs.
+
+Both take (B, H, Sq, D) queries and (B, Hkv, Skv, D) keys/values with
+Hq % Hkv == 0 (GQA) and support causal masks, sliding windows, logit
+softcap, a global q-position offset (decode / chunked prefill) and KV
+padding lengths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiling_mask as tm
+
+NEG_INF = -1e30
+
+
+def _expand_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, h, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, h, n_rep, s, d)).reshape(
+        b, h * n_rep, s, d)
+
+
+def _apply_softcap(s: jax.Array, softcap: Optional[float]) -> jax.Array:
+    if softcap is None:
+        return s
+    return softcap * jnp.tanh(s / softcap)
+
+
+def standard_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       scale: Optional[float] = None,
+                       q_offset: int = 0,
+                       kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Naive attention with a fully materialized (Sq, Skv) mask."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    k = _expand_kv(k, hq // hkv)
+    v = _expand_kv(v, hq // hkv)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _apply_softcap(s, softcap)
+    mask = tm.dense_mask(sq, k.shape[2], causal=causal, window=window,
+                         q_offset=q_offset)[None, None]
+    if kv_len is not None:
+        kvm = jnp.arange(k.shape[2])[None, None, None, :] < \
+            jnp.asarray(kv_len).reshape(b, 1, 1, 1)
+        mask = mask & kvm
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "q_offset",
+                     "block_kv"))
+def flash_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    q_offset: int = 0,
+                    kv_len: Optional[jax.Array] = None,
+                    block_kv: int = 512) -> jax.Array:
+    """Chunked online-softmax attention (the kernel's algorithm, in jnp).
+
+    Scans over KV chunks of ``block_kv``; maintains running (m, l, acc)
+    exactly as the kernel does.  Future-only chunks are excluded from the
+    scan range statically (the grid-level part of the paper's block skip).
+    """
+    out, _ = flash_reference_with_lse(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, kv_len=kv_len, block_kv=block_kv)
+    return out
+
+
+def flash_reference_with_lse(q, k, v, *, causal=True, window=None,
+                             softcap=None, scale=None, q_offset=0,
+                             kv_len=None, block_kv=512):
+    """Like flash_reference but also returns logsumexp (for CP merging)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32)
+
+    block_kv = min(block_kv, skv)
+    n_chunks = (skv + block_kv - 1) // block_kv
+    # Static grid-level skip: with causal masking, chunks entirely in the
+    # future of the last query row never contribute.
+    if causal:
+        last_q = q_offset + sq - 1
+        n_chunks = min(n_chunks, last_q // block_kv + 1)
+    pad = n_chunks * block_kv - min(skv, n_chunks * block_kv)
+    usable = n_chunks * block_kv
+    kc = k[:, :, :usable]
+    vc = v[:, :, :usable]
+    if pad or usable > skv:
+        pad_n = usable - skv
+        if pad_n > 0:
+            kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad_n), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad_n), (0, 0)))
+    # (n_chunks, B, Hkv, block_kv, D)
+    kc = kc.reshape(b, hkv, n_chunks, block_kv, d).transpose(2, 0, 1, 3, 4)
+    vc = vc.reshape(b, hkv, n_chunks, block_kv, d).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+    effective_kv = jnp.minimum(
+        jnp.asarray(kv_len if kv_len is not None else skv), skv)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        j, k_j, v_j = inp
+        k_j = _expand_kv(k_j, n_rep).astype(jnp.float32)
+        v_j = _expand_kv(v_j, n_rep).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_j) * scale
+        s = _apply_softcap(s, softcap)
+        kv_pos = j * block_kv + jnp.arange(block_kv)
+        mask = jnp.ones((sq, block_kv), jnp.bool_)
+        if causal:
+            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        maskb = mask[None, None] & \
+            (kv_pos[None, None, None, :] <
+             jnp.asarray(effective_kv).reshape(-1, 1, 1, 1))
+        s = jnp.where(maskb, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, v_j)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    l_safe = jnp.where(l == 0, 1.0, l)
+    out = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def decode_reference(q, k_cache, v_cache, kv_len, *,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-token decode attention oracle.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S, D); kv_len: (B,) current lengths
+    (the new token's position is kv_len - 1).
+    """
+    b = q.shape[0]
+    q_off = 0  # positions handled through kv_len masking below
+    s = k_cache.shape[2]
+    hq, hkv = q.shape[1], k_cache.shape[1]
+    k = _expand_kv(k_cache, hq // hkv).astype(jnp.float32)
+    v = _expand_kv(v_cache, hq // hkv).astype(jnp.float32)
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k) * scale
+    logits = _apply_softcap(logits, softcap)
+    pos = jnp.arange(s)[None, None, None, :]
+    lens = jnp.asarray(kv_len).reshape(b, 1, 1, 1)
+    mask = pos < lens
+    if window is not None:
+        mask = mask & (pos >= lens - window)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)

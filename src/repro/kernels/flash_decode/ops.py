@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the flash-decode kernel (inference only, no vjp)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.kernels.flash_decode.kernel import flash_decode_fwd
+
+
+def flash_decode(q, k_cache, v_cache, kv_len, *,
+                 window: Optional[int] = None,
+                 softcap: Optional[float] = None,
+                 scale: Optional[float] = None,
+                 block_kv: int = 512,
+                 interpret: bool = False):
+    """Decode attention: q (B, Hq, D) against (B, Hkv, S, D) caches."""
+    return flash_decode_fwd(
+        q, k_cache, v_cache, kv_len, window=window, softcap=softcap,
+        scale=scale, block_kv=block_kv, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Oracle for flash_decode: re-exports the fastattn decode reference."""
+from repro.kernels.fastattn.ref import decode_reference  # noqa: F401

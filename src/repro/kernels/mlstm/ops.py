@@ -1,0 +1,42 @@
+"""Jit'd wrapper for the chunkwise mLSTM kernel with recompute backward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm import kernel as _kernel
+from repro.kernels.mlstm import ref as _ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk: int = 128,
+                    impl: str = "reference"):
+    """Chunkwise mLSTM: returns h (B,H,S,dv) only (state-less API).
+
+    impl: 'pallas' | 'interpret' | 'reference'.
+    """
+    if impl in ("pallas", "interpret"):
+        h, _ = _kernel.mlstm_chunkwise_fwd(
+            q, k, v, i_gate, f_gate, chunk=chunk,
+            interpret=(impl == "interpret"))
+        return h
+    return _ref.mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk=chunk)
+
+
+def _fwd(q, k, v, i_gate, f_gate, chunk, impl):
+    return mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk, impl), \
+        (q, k, v, i_gate, f_gate)
+
+
+def _bwd(chunk, impl, res, g):
+    q, k, v, i_gate, f_gate = res
+
+    def f(q, k, v, ig, fg):
+        return _ref.mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+
+    _, vjp = jax.vjp(f, q, k, v, i_gate, f_gate)
+    return vjp(g)
+
+
+mlstm_chunkwise.defvjp(_fwd, _bwd)

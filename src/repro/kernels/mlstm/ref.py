@@ -1,0 +1,180 @@
+"""Pure-jnp oracles for the mLSTM cell (xLSTM, arXiv:2405.04517).
+
+Stabilized matrix-LSTM:
+    logf_t = logsigmoid(ftilde_t)
+    m_t    = max(logf_t + m_{t-1}, itilde_t)
+    f'_t   = exp(logf_t + m_{t-1} - m_t);   i'_t = exp(itilde_t - m_t)
+    C_t    = f'_t C_{t-1} + i'_t k_t v_t^T          (d_k x d_v)
+    n_t    = f'_t n_{t-1} + i'_t k_t
+    h_t    = (q_t C_t) / max(|q_t . n_t|, exp(-m_t))     q scaled d_k^-1/2
+
+Three equivalent forms: ``mlstm_recurrent`` (scan; decode path),
+``mlstm_parallel`` (quadratic masked; short-seq oracle) and
+``mlstm_chunkwise`` (linear in S; the kernel's algorithm).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+def mlstm_recurrent(q, k, v, i_gate, f_gate, initial_state=None):
+    """Sequential oracle.
+
+    q,k: (B, H, S, dk); v: (B, H, S, dv); gates: (B, H, S).
+    Returns (h, state): h (B, H, S, dv);
+    state = (C (B,H,dk,dv), n (B,H,dk), m (B,H)).
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    q = q.astype(jnp.float32) * dk ** -0.5
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = _logsigmoid(f_gate.astype(jnp.float32))
+    i_gate = i_gate.astype(jnp.float32)
+
+    if initial_state is None:
+        C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = initial_state
+
+    def step(carry, x):
+        C, n, m = carry
+        qt, kt, vt, it, lft = x
+        m_new = jnp.maximum(lft + m, it)
+        fp = jnp.exp(lft + m - m_new)[..., None, None]
+        ip = jnp.exp(it - m_new)[..., None, None]
+        C = fp * C + ip * (kt[..., :, None] * vt[..., None, :])
+        n = fp[..., 0] * n + ip[..., 0] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), i_gate.transpose(2, 0, 1),
+          logf.transpose(2, 0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3), (C, n, m)
+
+
+def mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Quadratic masked oracle (no chunking)."""
+    b, h, s, dk = q.shape
+    q = q.astype(jnp.float32) * dk ** -0.5
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = _logsigmoid(f_gate.astype(jnp.float32))
+    i_gate = i_gate.astype(jnp.float32)
+    bsum = jnp.cumsum(logf, axis=-1)                       # (B,H,S)
+    # D[i,j] = b_i - b_j + itilde_j  for j <= i
+    D = bsum[..., :, None] - bsum[..., None, :] + i_gate[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    D = jnp.where(mask, D, NEG_INF)
+    m = jnp.max(D, axis=-1)                                # (B,H,S)
+    w = jnp.exp(D - m[..., None])
+    scores = jnp.einsum("bhid,bhjd->bhij", q, k) * w
+    num = jnp.einsum("bhij,bhjv->bhiv", scores, v)
+    nvec = jnp.einsum("bhij,bhjd->bhid", w, k)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhid,bhid->bhi", q, nvec)),
+                      jnp.exp(-m))
+    return num / den[..., None]
+
+
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, chunk: int = 128,
+                    initial_state=None, return_state: bool = False):
+    """Chunk-parallel form: intra-chunk quadratic + inter-chunk recurrence.
+
+    This is the exact algorithm the Pallas kernel implements.
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0),) * 2 + ((0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0),) * 2 + ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0),) * 2 + ((0, pad), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0),) * 2 + ((0, pad),),
+                         constant_values=NEG_INF)
+        f_gate = jnp.pad(f_gate, ((0, 0),) * 2 + ((0, pad),),
+                         constant_values=30.0)   # logf ~ 0 for padding
+    sp = s + pad
+    n_chunks = sp // chunk
+
+    qf = q.astype(jnp.float32) * dk ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = _logsigmoid(f_gate.astype(jnp.float32))
+    ig = i_gate.astype(jnp.float32)
+
+    def to_chunks(x):
+        return x.reshape(b, h, n_chunks, chunk, *x.shape[4:]) \
+            if x.ndim == 5 else x.reshape(b, h, n_chunks, chunk)
+
+    qc = qf.reshape(b, h, n_chunks, chunk, dk).transpose(2, 0, 1, 3, 4)
+    kc = kf.reshape(b, h, n_chunks, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = vf.reshape(b, h, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+    igc = ig.reshape(b, h, n_chunks, chunk).transpose(2, 0, 1, 3)
+    lfc = logf.reshape(b, h, n_chunks, chunk).transpose(2, 0, 1, 3)
+
+    if initial_state is None:
+        C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = initial_state
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        C, n, m = xs_step(carry, xs)
+        return C, n, m
+
+    def xs_step(carry, xs):
+        C, n, m = carry
+        qi, ki, vi, ii, lf = xs
+        bsum = jnp.cumsum(lf, axis=-1)                     # (B,H,L)
+        btot = bsum[..., -1]                               # (B,H)
+        # ---- per-row stabilizer -------------------------------------
+        Dt = bsum[..., :, None] - bsum[..., None, :] + ii[..., None, :]
+        Dt = jnp.where(tri, Dt, NEG_INF)
+        m_intra = jnp.max(Dt, axis=-1)                     # (B,H,L)
+        m_inter = m[..., None] + bsum                      # (B,H,L)
+        m_row = jnp.maximum(m_intra, m_inter)
+        # ---- intra-chunk ---------------------------------------------
+        w = jnp.exp(Dt - m_row[..., None])
+        scores = jnp.einsum("bhid,bhjd->bhij", qi, ki) * w
+        num = jnp.einsum("bhij,bhjv->bhiv", scores, vi)
+        nrow = jnp.einsum("bhij,bhjd->bhid", w, ki)
+        # ---- inter-chunk (state) -------------------------------------
+        wi = jnp.exp(m_inter - m_row)                      # (B,H,L)
+        num = num + wi[..., None] * jnp.einsum("bhid,bhdv->bhiv", qi, C)
+        nrow = nrow + wi[..., None] * n[..., None, :]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhid,bhid->bhi", qi, nrow)),
+                          jnp.exp(-m_row))
+        h_out = num / den[..., None]
+        # ---- state update --------------------------------------------
+        m_new = jnp.maximum(m + btot,
+                            jnp.max(btot[..., None] - bsum + ii, axis=-1))
+        wC = jnp.exp(m + btot - m_new)                     # (B,H)
+        wk = jnp.exp(btot[..., None] - bsum + ii - m_new[..., None])
+        C = wC[..., None, None] * C + jnp.einsum(
+            "bhj,bhjd,bhjv->bhdv", wk, ki, vi)
+        n = wC[..., None] * n + jnp.einsum("bhj,bhjd->bhd", wk, ki)
+        return (C, n, m_new), h_out
+
+    (C, n, m), hs = jax.lax.scan(xs_step, (C0, n0, m0),
+                                 (qc, kc, vc, igc, lfc))
+    out = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, sp, dv)[:, :, :s]
+    if return_state:
+        return out, (C, n, m)
+    return out

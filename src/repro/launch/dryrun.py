@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory/cost/collective evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init); smoke tests and benchmarks never import this
+module, so they keep seeing 1 device.
+"""
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import gzip                # noqa: E402
+import json                # noqa: E402
+import sys                 # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config import (SHAPES, TrainConfig, get_model_config)  # noqa: E402
+from repro.launch import specs as S                        # noqa: E402
+from repro.launch.mesh import make_production_mesh, parallel_for_mesh  # noqa: E402
+from repro.models import build_model                       # noqa: E402
+from repro.sharding.rules import (axis_rules, default_rules,  # noqa: E402
+                                  param_sharding_tree)
+from repro.training import optimizer as opt_mod            # noqa: E402
+from repro.training.train_step import TrainState, make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _sharding_tree(logical_tree, mesh, rules):
+    return param_sharding_tree(logical_tree, mesh, rules)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def skip_reason(arch: str, shape_name: str) -> str:
+    """Documented cell skips (DESIGN.md §3)."""
+    cfg = get_model_config(arch)
+    if shape_name == "long_500k" and not cfg.is_subquadratic():
+        return ("long_500k needs sub-quadratic attention; "
+                f"{arch} has full/global attention layers")
+    return ""
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, rules=None,
+               parallel=None):
+    """Construct (fn, args_sds, in_shardings) for one dry-run cell."""
+    cfg = get_model_config(arch)
+    shape = SHAPES[shape_name]
+    parallel = parallel or parallel_for_mesh(mesh)
+    model = build_model(cfg, parallel)
+    rules = rules or default_rules(multi_pod="pod" in mesh.axis_names)
+
+    params_sds = S.abstract_params(model)
+    params_sh = _sharding_tree(model.logical(), mesh, rules)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        step = make_train_step(model, cfg, parallel, tcfg)
+        opt_sds = jax.eval_shape(opt_mod.init_adamw, params_sds)
+        state_sds = TrainState(params=params_sds, opt=opt_sds)
+        state_sh = TrainState(
+            params=params_sh,
+            opt=opt_mod.AdamWState(step=_replicated(mesh), mu=params_sh,
+                                   nu=params_sh))
+        batch_sds = {k: v for k, v in S.batch_specs(cfg, shape).items()}
+        batch_sh = _sharding_tree(S.batch_logical(cfg, shape), mesh, rules)
+        if cfg.is_encoder_decoder or cfg.modality == "vision_stub":
+            pass
+        fn = step
+        args = (state_sds, batch_sds)
+        shardings = (state_sh, batch_sh)
+        out_sh = (state_sh, None)
+    elif shape.kind == "prefill":
+        batch_sds = S.batch_specs(cfg, shape)
+        batch_sh = _sharding_tree(S.batch_logical(cfg, shape), mesh, rules)
+        if cfg.is_encoder_decoder:
+            def fn(params, batch):
+                return model.apply(params, batch["enc_embeds"],
+                                   batch["tokens"])
+        elif cfg.modality == "vision_stub":
+            def fn(params, batch):
+                return model.apply(params,
+                                   inputs_embeds=batch["inputs_embeds"],
+                                   positions=batch["positions"])
+        else:
+            def fn(params, batch):
+                return model.apply(params, batch["tokens"])
+        batch_sds.pop("labels", None)
+        batch_sh.pop("labels", None)
+        args = (params_sds, batch_sds)
+        shardings = (params_sh, batch_sh)
+        out_sh = None
+    else:  # decode
+        token_sds, cache_sds, pos_sds = S.decode_specs(cfg, shape, model)
+        cache_sh = _sharding_tree(
+            model.cache_logical(shape.global_batch, shape.seq_len),
+            mesh, rules)
+
+        def fn(params, token, cache, pos):
+            return model.decode_step(params, token, cache, pos)
+
+        token_sh = _sharding_tree(
+            (("batch",), (shape.global_batch,)), mesh, rules)
+        args = (params_sds, token_sds, cache_sds, pos_sds)
+        shardings = (params_sh, token_sh, cache_sh, _replicated(mesh))
+        # keep the updated cache in its input sharding: without this GSPMD
+        # may materialize the scan's cache output gathered over `model`
+        # (observed: 36 GB/dev temp for qwen2.5 decode_32k)
+        out_sh = (None, cache_sh)
+    return fn, args, shardings, out_sh, model, rules
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, save_hlo: bool = True,
+             rules=None, tag: str = "") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "status": "skipped", "reason": reason}
+        _save(rec, out_dir, cell_id)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        with axis_rules(rules, mesh=mesh):
+            fn, args, shardings, out_sh, model, rules_used = build_cell(
+                arch, shape_name, mesh, rules=rules)
+            shape_kind = SHAPES[shape_name].kind
+            # serving donates the KV cache (in-place update); training
+            # donates the train state (params/opt buffers reused)
+            donate = (2,) if shape_kind == "decode" else (
+                (0,) if shape_kind == "train" else ())
+            with mesh:
+                lowered = jax.jit(fn, in_shardings=shardings,
+                                  out_shardings=out_sh,
+                                  donate_argnums=donate).lower(*args)
+                compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        rec = {
+            "cell": cell_id, "arch": arch, "shape": shape_name,
+            "mesh": mesh_name, "status": "ok",
+            "n_devices": int(mesh.devices.size),
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+            },
+            "xla_cost": {"flops": cost.get("flops", 0.0),
+                         "bytes_accessed": cost.get("bytes accessed", 0.0)},
+        }
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            hlo_path = os.path.join(out_dir, cell_id + ".hlo.gz")
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(compiled.as_text())
+            rec["hlo"] = hlo_path
+        # in-process roofline terms (uses our own HLO cost parser)
+        try:
+            from repro.analysis.roofline import roofline_from_hlo_text
+            terms = roofline_from_hlo_text(
+                compiled.as_text(), arch=arch, shape_name=shape_name,
+                n_devices=int(mesh.devices.size))
+            rec["roofline"] = terms
+        except Exception as e:           # analysis must never fail the cell
+            rec["roofline_error"] = f"{type(e).__name__}: {e}"
+    except Exception as e:
+        rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+               "mesh": mesh_name, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    _save(rec, out_dir, cell_id)
+    return rec
+
+
+def _save(rec: dict, out_dir: str, cell_id: str):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED_ARCHS
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                               save_hlo=not args.no_hlo)
+                status = rec["status"]
+                extra = rec.get("reason") or rec.get("error", "")
+                print(f"[{status:7s}] {rec['cell']} "
+                      f"({rec.get('compile_s', 0)}s) {extra}", flush=True)
+                if status == "error":
+                    failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input --
+weak-type-correct, shardable, zero device allocation.
+
+For each (arch x shape) cell this returns the abstract arguments of the
+step function the dry-run lowers:
+  train    -> train_step(state, batch)
+  prefill  -> apply(params, tokens/embeds)
+  decode   -> decode_step(params, token, cache, pos)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract training/prefill batch for an architecture."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "enc_embeds": sds((b, cfg.encoder_seq, cfg.d_model),
+                              jnp.bfloat16),
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+    if cfg.modality == "vision_stub":
+        return {
+            "inputs_embeds": sds((b, s, cfg.d_model), jnp.bfloat16),
+            "positions": sds((3, b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+    return {
+        "tokens": sds((b, s), jnp.int32),
+        "labels": sds((b, s), jnp.int32),
+    }
+
+
+def batch_logical(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Logical axes for the batch (batch dim sharded over DP)."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "enc_embeds": (("batch", None, None),
+                           (b, cfg.encoder_seq, cfg.d_model)),
+            "tokens": (("batch", None), (b, s)),
+            "labels": (("batch", None), (b, s)),
+        }
+    if cfg.modality == "vision_stub":
+        return {
+            "inputs_embeds": (("batch", None, None), (b, s, cfg.d_model)),
+            "positions": ((None, "batch", None), (3, b, s)),
+            "labels": (("batch", None), (b, s)),
+        }
+    return {"tokens": (("batch", None), (b, s)),
+            "labels": (("batch", None), (b, s))}
+
+
+def abstract_params(model) -> Any:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(model.init, key)
+
+
+def abstract_cache(model, batch: int, max_seq: int) -> Any:
+    if model.cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: model.init_cache(batch, max_seq))
+    return jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model):
+    b, s = shape.global_batch, shape.seq_len
+    token = sds((b,), jnp.int32)
+    cache = abstract_cache(model, b, s)
+    pos = sds((), jnp.int32)
+    return token, cache, pos

@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m \
+        --steps 50 --batch 8 --seq 256 [--smoke]
+
+Runs on whatever devices exist (CPU here, TPU pod in production):
+data pipeline -> jit'd train step under the mesh + logical rules ->
+checkpointing -> fault-tolerance hooks.  --smoke shrinks the arch to the
+reduced config so a 100M-scale run finishes on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ParallelConfig, TrainConfig, get_model_config,
+                          reduce_for_smoke)
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_mesh_for
+from repro.models import build_model
+from repro.sharding.rules import axis_rules, param_sharding_tree
+from repro.training import optimizer as opt_mod
+from repro.training.checkpoint import CheckpointManager
+from repro.training.fault_tolerance import CadenceController, \
+    StragglerDetector
+from repro.training.train_step import TrainState, init_train_state, \
+    make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_model_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    parallel = ParallelConfig(data=args.data, model=args.model_axis,
+                              microbatches=args.microbatches,
+                              remat="selective")
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1),
+                       checkpoint_dir=args.ckpt_dir,
+                       checkpoint_every=args.ckpt_every)
+    mesh = make_mesh_for(parallel)
+    model = build_model(cfg, parallel)
+    ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+    cadence = CadenceController()
+    stragglers = StragglerDetector()
+
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch))
+
+    with axis_rules(mesh=mesh):
+        state = init_train_state(model, jax.random.PRNGKey(tcfg.seed))
+        start = 0
+        if args.resume and ckpt.latest_step() is not None:
+            state, manifest = ckpt.restore(state)
+            start = manifest["step"]
+            data.restore(manifest["extras"]["data"])
+            print(f"resumed from step {start}")
+        params_sh = param_sharding_tree(model.logical(), mesh)
+        state = TrainState(
+            params=jax.device_put(state.params, params_sh),
+            opt=opt_mod.AdamWState(
+                step=state.opt.step,
+                mu=jax.device_put(state.opt.mu, params_sh),
+                nu=jax.device_put(state.opt.nu, params_sh)))
+        step_fn = jax.jit(make_train_step(model, cfg, parallel, tcfg),
+                          donate_argnums=(0,))
+
+        host = "host0"
+        with mesh:
+            for step in range(start, args.steps):
+                t0 = time.perf_counter()
+                batch = data.next()
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                state, metrics = step_fn(state, batch)
+                if step % 5 == 0 or step == args.steps - 1:
+                    loss = float(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    tok_s = args.batch * args.seq / dt
+                    print(f"step {step:5d} loss {loss:8.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):8.3f} "
+                          f"{tok_s:9.0f} tok/s", flush=True)
+                stragglers.record(host, time.perf_counter() - t0)
+                cadence.record_steps()
+                every = min(tcfg.checkpoint_every, cadence.cadence())
+                if (step + 1) % every == 0:
+                    ckpt.save(step + 1, state,
+                              extras={"data": data.state()}, async_=True)
+        ckpt.wait()
+        ckpt.save(args.steps, state, extras={"data": data.state()})
+        print(f"done; final checkpoint at step {args.steps} "
+              f"in {tcfg.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

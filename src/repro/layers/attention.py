@@ -1,0 +1,173 @@
+"""GQA attention layer wired to the FastAttention core.
+
+Distribution (DESIGN.md §4.1): activations are sequence-sharded on the
+`model` axis (context parallelism).  Q keeps its seq sharding; K/V are
+constrained replicated along `model` (one small GQA KV all-gather per
+layer), so the flash scan partitions cleanly over Q rows with zero extra
+collectives.  At decode time the KV cache is instead sharded along its
+*sequence* dim (`kv_seq -> model`); XLA decomposes the softmax/PV
+reductions over the sharded dim into exactly the LSE-merge collectives of
+core/distributed_decode.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.fastattention import fast_attention, fast_attention_decode
+from repro.layers import common, rotary
+from repro.sharding.rules import constrain
+
+# Decode KV-cache layout: "bshd" (token-major, default) or "bhsd"
+# (head-major: the QK/PV contractions need no transposed copy of the
+# cache -- decode hillclimb iteration, EXPERIMENTS.md §Perf cell 3).
+KV_CACHE_LAYOUT = "bshd"
+
+
+class KVCache(NamedTuple):
+    k: jax.Array            # (B, S_max, Hkv, D) or (B, Hkv, S_max, D)
+    v: jax.Array
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d, qd, dtype),
+        "wk": common.dense_init(ks[1], d, kvd, dtype),
+        "wv": common.dense_init(ks[2], d, kvd, dtype),
+        "wo": common.dense_init(ks[3], qd, d, dtype, scale=qd ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def attention_logical(cfg: ModelConfig):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": (("attn_row", "heads"), (d, qd)),
+        "wk": (("attn_row", "heads"), (d, kvd)),
+        "wv": (("attn_row", "heads"), (d, kvd)),
+        "wo": (("attn_row", "d_model"), (qd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = (("heads",), (qd,))
+        p["bk"] = (("heads",), (kvd,))
+        p["bv"] = (("heads",), (kvd,))
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    q = common.dense(x, params["wq"], params.get("bq"))
+    k = common.dense(x, params["wk"], params.get("bk"))
+    v = common.dense(x, params["wv"], params.get("bv"))
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.rope_type == "rope":
+        q = rotary.apply_rope(q, positions, theta=cfg.rope_theta)
+        k = rotary.apply_rope(k, positions, theta=cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = rotary.apply_mrope(q, positions, sections=cfg.mrope_sections,
+                               theta=cfg.rope_theta)
+        k = rotary.apply_mrope(k, positions, sections=cfg.mrope_sections,
+                               theta=cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(params, x, cfg: ModelConfig, *,
+                    positions, window: Optional[int] = None,
+                    causal: bool = True,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Training/prefill attention.  x: (B, S, D) seq-sharded."""
+    impl = impl or cfg.attention_impl
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    q = constrain(q, "batch", "seq", "heads", None)
+    # context parallelism: KV replicated along `model` (GQA keeps it small)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    out = fast_attention(q, k, v, causal=causal, window=window,
+                         softcap=cfg.attn_logit_softcap, impl=impl)
+    out = constrain(out, "batch", "seq", "heads", None)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, cfg.q_dim)
+    return common.dense(out, params["wo"])
+
+
+def apply_cross_attention(params, x, enc_k, enc_v, cfg: ModelConfig, *,
+                          impl: Optional[str] = None) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V."""
+    impl = impl or cfg.attention_impl
+    b, s, _ = x.shape
+    q = common.dense(x, params["wq"], params.get("bq"))
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    q = constrain(q, "batch", "seq", "heads", None)
+    out = fast_attention(q, enc_k, enc_v, causal=False,
+                         softcap=cfg.attn_logit_softcap, impl=impl)
+    out = out.reshape(b, s, cfg.q_dim)
+    return common.dense(out, params["wo"])
+
+
+def project_cross_kv(params, enc_states, cfg: ModelConfig):
+    b, s, _ = enc_states.shape
+    k = common.dense(enc_states, params["wk"], params.get("bk"))
+    v = common.dense(enc_states, params["wv"], params.get("bv"))
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    return constrain(k, "batch", None, "heads", None), \
+        constrain(v, "batch", None, "heads", None)
+
+
+def apply_attention_decode(params, x, cfg: ModelConfig, cache: KVCache, *,
+                           pos, window: Optional[int] = None,
+                           impl: Optional[str] = None):
+    """One-token decode.  x: (B, 1, D); pos: scalar current position.
+
+    Returns (out (B,1,D), new_cache).  The cache sequence dim carries the
+    `kv_seq -> model` sharding (context-parallel decode).
+    """
+    impl = impl or cfg.attention_impl
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.rope_type == "mrope":   # text continuation: t=h=w=pos
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    if KV_CACHE_LAYOUT == "bhsd":
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype).transpose(0, 2, 1, 3),
+            (0, 0, pos, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype).transpose(0, 2, 1, 3),
+            (0, 0, pos, 0))
+        k = constrain(k, "batch", "heads", "kv_seq", None)
+        v = constrain(v, "batch", "heads", "kv_seq", None)
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, pos, 0, 0))
+        k = constrain(k, "batch", "kv_seq", "heads", None)
+        v = constrain(v, "batch", "kv_seq", "heads", None)
+    kv_len = jnp.full((b,), pos + 1, jnp.int32)
+    out = fast_attention_decode(
+        q, k, v, kv_len, window=window, softcap=cfg.attn_logit_softcap,
+        impl="reference" if impl == "reference" else impl,
+        layout=KV_CACHE_LAYOUT)
+    out = out.reshape(b, 1, cfg.q_dim)
+    return common.dense(out, params["wo"]), KVCache(k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype) -> KVCache:
+    if KV_CACHE_LAYOUT == "bhsd":
+        shape = (batch, cfg.num_kv_heads, max_seq, cfg.head_dim)
+    else:
+        shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))

@@ -1,0 +1,52 @@
+"""Parameter initialization helpers (functional, flax-free).
+
+Parameters are nested dicts of jnp arrays.  Each initializer also records
+the *logical axes* of every leaf in a parallel tree (same structure, leaves
+are ``(logical_axes_tuple, shape)``) consumed by sharding.rules.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype,
+               logical=("d_model", "ff"), scale: Optional[float] = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return w.astype(dtype)
+
+
+def dense_logical(in_dim, out_dim, logical):
+    return (tuple(logical), (in_dim, out_dim))
+
+
+def dense(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None,
+          dtype=None) -> jax.Array:
+    dtype = dtype or x.dtype
+    y = jnp.einsum("...d,df->...f", x, w.astype(dtype))
+    if bias is not None:
+        y = y + bias.astype(dtype)
+    return y
+
+
+def split_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+def stack_params(param_list: Sequence):
+    """Stack a list of identical param trees along a new leading layer dim
+    (for lax.scan over layers)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *param_list)
+
+
+def stack_logical(logical_tree):
+    """Add the 'layers' logical axis to every leaf of a logical tree."""
+    from repro.sharding.rules import is_logical_leaf
+
+    def add(leaf):
+        logical, shape = leaf
+        return (("layers",) + logical, (None,) + tuple(shape))
+    return jax.tree.map(add, logical_tree, is_leaf=is_logical_leaf)

@@ -1,0 +1,47 @@
+"""Token embedding + LM head (vocab-sharded on `model`)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.sharding.rules import constrain
+
+
+def init_embedding(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    p = {"embed": (jax.random.normal(
+        ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32)
+        * cfg.d_model ** -0.5).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    return p
+
+
+def embedding_logical(cfg: ModelConfig):
+    p = {"embed": (("vocab", "d_model"), (cfg.vocab_size, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (("d_model", "vocab"),
+                        (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, "batch", "seq", None)
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return constrain(logits, "batch", "seq", "vocab")

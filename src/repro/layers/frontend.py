@@ -1,0 +1,45 @@
+"""Modality frontend STUBS (per assignment: [audio]/[vlm] entries specify
+the transformer backbone only; input_specs() provides precomputed
+frame/patch embeddings).
+
+The stubs are linear adapters from precomputed embeddings into d_model so
+the backbone sees correctly-shaped, trainable inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import common
+
+
+def init_frontend(key, cfg: ModelConfig, dtype):
+    if cfg.modality == "text":
+        return {}
+    ks = jax.random.split(key, 2)
+    return {
+        "adapter": common.dense_init(ks[0], cfg.d_model, cfg.d_model, dtype),
+        "pos_embed": (jax.random.normal(
+            ks[1], (cfg.encoder_seq if cfg.modality == "audio_stub" else 1,
+                    cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+    }
+
+
+def frontend_logical(cfg: ModelConfig):
+    if cfg.modality == "text":
+        return {}
+    rows = cfg.encoder_seq if cfg.modality == "audio_stub" else 1
+    return {
+        "adapter": (("d_model", None), (cfg.d_model, cfg.d_model)),
+        "pos_embed": ((None, "d_model"), (rows, cfg.d_model)),
+    }
+
+
+def apply_frontend(params, embeds: jax.Array, cfg: ModelConfig):
+    """embeds: precomputed (B, S, D) frame/patch embeddings (stub input)."""
+    x = common.dense(embeds, params["adapter"])
+    pe = params["pos_embed"]
+    if pe.shape[0] == x.shape[1]:
+        x = x + pe[None].astype(x.dtype)
+    return x

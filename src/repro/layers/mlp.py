@@ -1,0 +1,37 @@
+"""Dense MLP blocks: SwiGLU / GeGLU / GELU, column->row parallel on `ff`."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common
+from repro.sharding.rules import constrain
+
+
+def init_mlp(key, d: int, f: int, mlp_type: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": common.dense_init(ks[0], d, f, dtype),
+         "w_down": common.dense_init(ks[1], f, d, dtype)}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = common.dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp_logical(d: int, f: int, mlp_type: str):
+    p = {"w_up": (("d_model", "ff"), (d, f)),
+         "w_down": (("ff", "d_model"), (f, d))}
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = (("d_model", "ff"), (d, f))
+    return p
+
+
+def apply_mlp(params, x, mlp_type: str = "swiglu"):
+    h = common.dense(x, params["w_up"])
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(common.dense(x, params["w_gate"])) * h
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(common.dense(x, params["w_gate"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", "seq", "ff")
+    return common.dense(h, params["w_down"])

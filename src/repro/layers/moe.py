@@ -1,0 +1,130 @@
+"""Mixture-of-experts FFN with argsort-based capacity dispatch.
+
+Top-k routing -> per-group argsort by expert id -> static-capacity gather
+-> batched expert GEMMs -> weighted scatter-combine.  O(tokens * top_k)
+memory (no GShard (T, E, C) one-hot dispatch tensor), which is what lets
+the 128-expert qwen3-moe cells compile at 512 devices.
+
+Expert parallelism: the expert dim carries the `expert -> model` logical
+axis; when E % model_axis != 0 (grok-1: 8 experts on a 16-way axis) the
+rule drops to per-expert tensor parallelism on `ff` instead (the
+divisibility check in sharding.rules handles this automatically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import common
+from repro.sharding.rules import constrain
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.expert_dff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "router": common.dense_init(ks[0], d, e, dtype),
+        "w_up": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (e, f, d), jnp.float32)
+                   * f ** -0.5).astype(dtype),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f), jnp.float32)
+                       * scale).astype(dtype)
+    return p
+
+
+def moe_logical(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.expert_dff, cfg.num_experts
+    p = {
+        "router": (("d_model", None), (d, e)),
+        "w_up": (("expert", "d_model", "ff"), (e, d, f)),
+        "w_down": (("expert", "ff", "d_model"), (e, f, d)),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = (("expert", "d_model", "ff"), (e, d, f))
+    return p
+
+
+def apply_moe(params, x, cfg: ModelConfig, *,
+              capacity_factor: float = None):
+    """x: (B, S, D) -> (B, S, D).  Groups = batch rows (dispatch is local
+    to a group, so group boundaries align with the data sharding)."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.num_experts_per_tok
+    cf = capacity_factor or cfg.moe_capacity_factor
+    cap = max(1, int(s * k / e * cf))
+
+    logits = common.dense(x, params["router"]).astype(jnp.float32)
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)
+    gates = gates / jnp.clip(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # ---- per-group (batch row) dispatch ------------------------------
+    # flatten the k assignments of the s tokens: (B, S*k)
+    flat_expert = idx.reshape(b, s * k)
+    order = jnp.argsort(flat_expert, axis=-1)               # stable
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=-1)
+    # position of each sorted entry within its expert's run
+    same = sorted_expert[:, :, None] == jnp.arange(e)[None, None, :]
+    pos_in_e = jnp.cumsum(same, axis=1) - 1
+    slot = jnp.take_along_axis(
+        pos_in_e.reshape(b, s * k, e), sorted_expert[..., None],
+        axis=-1)[..., 0]                                    # (B, S*k)
+    keep = slot < cap
+    # destination (expert, slot) for each sorted assignment
+    dest = jnp.where(keep, sorted_expert * cap + slot, e * cap)
+    token_of = order // k                                   # (B, S*k)
+
+    # gather tokens into (B, E, cap, D).  The index tensor is constrained
+    # to the expert sharding BEFORE the gather so every `model` shard
+    # gathers only its own experts' rows from the (replicated-D) tokens --
+    # otherwise GSPMD materializes the full dispatched tensor and
+    # all-reduces it (measured: 4.3 GB x layers of avoidable all-reduce).
+    inv = jnp.full((b, e * cap + 1), s, jnp.int32)          # s = dummy row
+    inv = jax.vmap(lambda inv_b, dest_b, tok_b:
+                   inv_b.at[dest_b].set(tok_b))(inv, dest, token_of)
+    inv = inv[:, :e * cap].reshape(b, e, cap)
+    inv = constrain(inv, "batch", "expert", None)
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad[:, None], inv[..., None], axis=2)             # (B, E, cap, D)
+    xe = constrain(xe, "batch", "expert", None, None)
+
+    # ---- expert FFN ----------------------------------------------------
+    h = jnp.einsum("becd,edf->becf", xe, params["w_up"].astype(x.dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("becd,edf->becf", xe,
+                       params["w_gate"].astype(x.dtype))
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(x.dtype))
+    ye = constrain(ye, "batch", "expert", None, None)
+    ye = ye.reshape(b, e * cap, d)
+
+    # ---- combine: per-shard scatter-add + small partial reduction -----
+    # A gather from the expert-sharded ye would make GSPMD all-reduce the
+    # full (B, S*k, D) picked tensor (4.3 GB/layer for qwen3-moe).
+    # Instead each expert shard scatter-adds its own slots' weighted
+    # outputs into a (B, S+1, D) partial; the cross-shard reduction is
+    # then only (B, S, D) -- k*drop-factor smaller.
+    gate_flat = jnp.take_along_axis(
+        gates.reshape(b, s * k), order, axis=-1)            # sorted order
+    slot_gate = jnp.zeros((b, e * cap + 1), jnp.float32)
+    slot_gate = jax.vmap(lambda gb, db, vb: gb.at[db].set(vb))(
+        slot_gate, dest, gate_flat)
+    slot_gate = slot_gate[:, :e * cap].reshape(b, e, cap)
+    slot_gate = constrain(slot_gate, "batch", "expert", None)
+    weighted = ye.reshape(b, e, cap, d) * \
+        slot_gate[..., None].astype(ye.dtype)
+    weighted = constrain(weighted, "batch", "expert", None, None)
+    y_pad = jnp.zeros((b, s + 1, d), x.dtype)
+    # dropped slots carry dummy token index s -> land on the padding row
+    y_pad = jax.vmap(lambda yb, tb, wb: yb.at[tb].add(wb))(
+        y_pad, inv.reshape(b, e * cap), weighted.reshape(b, e * cap, d))
+    return constrain(y_pad[:, :s], "batch", None, None)

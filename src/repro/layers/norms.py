@@ -1,0 +1,32 @@
+"""RMSNorm / LayerNorm (f32 statistics, cast back to activation dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_norm(d: int, norm_type: str, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_logical(d: int, norm_type: str):
+    p = {"scale": (("d_model",), (d,))}
+    if norm_type == "layernorm":
+        p["bias"] = (("d_model",), (d,))
+    return p
+
+
+def apply_norm(params, x, norm_type: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * (var + eps) ** -0.5 * params["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * (var + eps) ** -0.5
+    y = y * params["scale"].astype(jnp.float32) + \
+        params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)

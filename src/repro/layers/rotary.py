@@ -1,0 +1,51 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim/2 frequency channels into (temporal, height,
+width) sections; positions are (3, B, S) -- text tokens use t=h=w=index,
+vision patch tokens use their 3-D coordinates (the frontend stub supplies
+them precomputed).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x, sin, cos):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                             # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, *,
+                sections: Sequence[int], theta: float = 10_000.0):
+    """x: (B, S, H, D); positions3: (3, B, S) int (t, h, w)."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = rope_freqs(d, theta)                             # (D/2,)
+    # section s of the frequency channels uses position component s
+    comp = jnp.concatenate([
+        jnp.full((sec,), i, jnp.int32) for i, sec in enumerate(sections)])
+    pos = jnp.take(positions3, comp, axis=0)                 # (D/2, B, S)
+    angles = pos.transpose(1, 2, 0).astype(jnp.float32) * freqs
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), sin, cos).astype(x.dtype)

@@ -1,0 +1,324 @@
+"""Recurrent layers: Mamba (selective scan), xLSTM mLSTM / sLSTM blocks.
+
+Distribution: recurrences run with the sequence dim UNSHARDED (scans are
+sequential); instead the channel/value dims carry the `channels -> model`
+logical axis -- mamba channels are independent (diagonal A) and the mLSTM
+value dim is a free axis of every einsum, so channel sharding costs zero
+collectives inside the scan (DESIGN.md §4.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import common
+from repro.sharding.rules import constrain
+
+
+# ===========================================================================
+# Mamba (S6) -- used by the hymba parallel-head block
+# ===========================================================================
+
+class MambaState(NamedTuple):
+    h: jax.Array            # (B, DI, N) ssm state
+    conv: jax.Array         # (B, K-1, DI) rolling conv inputs
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.q_dim                       # mirror attention heads (hymba)
+    n = cfg.ssm_state_size
+    kconv = cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": common.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (kconv, di), jnp.float32)
+                   * kconv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bc": common.dense_init(ks[2], di, 2 * n, dtype),
+        "w_dt": common.dense_init(ks[3], di, di, dtype, scale=di ** -0.5),
+        "dt_bias": jnp.full((di,), -4.0, dtype),
+        "a_log": jnp.zeros((di, n), jnp.float32) +
+        jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None, :],
+        "d_skip": jnp.ones((di,), dtype),
+        "w_out": common.dense_init(ks[4], di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def mamba_logical(cfg: ModelConfig):
+    d, di, n, kconv = (cfg.d_model, cfg.q_dim, cfg.ssm_state_size,
+                       cfg.conv_kernel)
+    return {
+        "w_in": (("d_model", "channels"), (d, 2 * di)),
+        "conv_w": ((None, "channels"), (kconv, di)),
+        "conv_b": (("channels",), (di,)),
+        "w_bc": (("channels", None), (di, 2 * n)),
+        "w_dt": (("channels", None), (di, di)),
+        "dt_bias": (("channels",), (di,)),
+        "a_log": (("channels", None), (di, n)),
+        "d_skip": (("channels",), (di,)),
+        "w_out": (("channels", "d_model"), (di, d)),
+    }
+
+
+def _mamba_scan_chunk(h0, xc, dtc, bc, cc, a):
+    """Associative scan within one chunk.
+
+    xc: (B, L, DI); dtc: (B, L, DI); bc/cc: (B, L, N); a: (DI, N).
+    h' = exp(dt*A) h + dt * B * x ;  y = (h C) + skip.
+    """
+    decay = jnp.exp(dtc[..., None] * a)                     # (B,L,DI,N)
+    drive = (dtc * xc)[..., None] * bc[:, :, None, :]       # (B,L,DI,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    dec, drv = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    h = dec * h0[:, None] + drv                             # (B,L,DI,N)
+    y = jnp.einsum("bldn,bln->bld", h, cc)
+    return y, h[:, -1]
+
+
+def apply_mamba(params, x, cfg: ModelConfig, *, chunk: int = 256,
+                state: Optional[MambaState] = None, decode: bool = False):
+    """x: (B, S, D) -> (B, S, D) (+ state when decode)."""
+    b, s, d = x.shape
+    di, n = cfg.q_dim, cfg.ssm_state_size
+    kconv = cfg.conv_kernel
+    xz = common.dense(x, params["w_in"])
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B,S,DI)
+    xin = constrain(xin, "batch", None, "channels")
+
+    if state is None:
+        conv_hist = jnp.zeros((b, kconv - 1, di), xin.dtype)
+        h0 = jnp.zeros((b, di, n), jnp.float32)
+    else:
+        conv_hist, h0 = state.conv, state.h
+
+    # causal depthwise conv over [hist | xin]
+    xin_ext = jnp.concatenate([conv_hist, xin], axis=1)
+    conv_w = params["conv_w"].astype(xin.dtype)             # (K, DI)
+    xc = sum(xin_ext[:, i:i + s] * conv_w[i] for i in range(kconv))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(xin.dtype))
+    new_hist = xin_ext[:, s:]
+
+    dt = jax.nn.softplus(common.dense(xc, params["w_dt"])
+                         + params["dt_bias"].astype(xc.dtype))
+    bc_cc = common.dense(xc, params["w_bc"])
+    bmat, cmat = jnp.split(bc_cc.astype(jnp.float32), 2, axis=-1)
+    a = -jnp.exp(params["a_log"])                           # (DI, N)
+    xcf = xc.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    if decode or s == 1:
+        y, h = _mamba_scan_chunk(h0, xcf, dtf, bmat, cmat, a)
+    else:
+        chunk = min(chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            xcf = jnp.pad(xcf, ((0, 0), (0, pad), (0, 0)))
+            dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+            bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        nc = (s + pad) // chunk
+
+        def step(h, xs):
+            xj, dj, bj, cj = xs
+            y, h = _mamba_scan_chunk(h, xj, dj, bj, cj, a)
+            return h, y
+
+        reshape = lambda t: t.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+        h, ys = jax.lax.scan(
+            step, h0, (reshape(xcf), reshape(dtf), reshape(bmat),
+                       reshape(cmat)))
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s + pad, di)[:, :s]
+
+    y = y.astype(x.dtype) + xc * params["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "batch", None, "channels")
+    out = common.dense(y, params["w_out"])
+    if decode:
+        return out, MambaState(h=h, conv=new_hist)
+    return out
+
+
+# ===========================================================================
+# xLSTM mLSTM block
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    c: jax.Array            # (B, H, dk, dv)
+    n: jax.Array            # (B, H, dk)
+    m: jax.Array            # (B, H)
+    conv: jax.Array         # placeholder for API symmetry
+
+
+def _di(cfg: ModelConfig) -> int:
+    return int(cfg.d_model * cfg.mlstm_proj_factor)
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = _di(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": common.dense_init(ks[0], d, di, dtype),
+        "w_gate": common.dense_init(ks[1], d, di, dtype),
+        "wq": common.dense_init(ks[2], di, di, dtype),
+        "wk": common.dense_init(ks[3], di, di, dtype),
+        "wv": common.dense_init(ks[4], di, di, dtype),
+        "w_if": common.dense_init(ks[5], di, 2 * cfg.num_heads, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.num_heads,), jnp.float32),
+                                 jnp.full((cfg.num_heads,), 3.0)]
+                                ).astype(dtype),
+        "w_down": common.dense_init(ks[6], di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def mlstm_logical(cfg: ModelConfig):
+    d, di, h = cfg.d_model, _di(cfg), cfg.num_heads
+    return {
+        "w_up": (("d_model", "channels"), (d, di)),
+        "w_gate": (("d_model", "channels"), (d, di)),
+        "wq": ((None, "channels"), (di, di)),
+        "wk": ((None, "channels"), (di, di)),
+        "wv": ((None, "channels"), (di, di)),
+        "w_if": (("channels", None), (di, 2 * h)),
+        "b_if": ((None,), (2 * h,)),
+        "w_down": (("channels", "d_model"), (di, d)),
+    }
+
+
+def apply_mlstm(params, x, cfg: ModelConfig, *, chunk: int = 128,
+                state: Optional[MLSTMState] = None, decode: bool = False,
+                impl: str = "reference"):
+    """xLSTM mLSTM block body (norm handled by the caller)."""
+    from repro.kernels.mlstm import ref as mref
+    from repro.kernels.mlstm.ops import mlstm_chunkwise
+    b, s, d = x.shape
+    di = _di(cfg)
+    nh = cfg.num_heads
+    hd = di // nh
+    xin = common.dense(x, params["w_up"])
+    z = common.dense(x, params["w_gate"])
+    q = common.dense(xin, params["wq"]).reshape(b, s, nh, hd)
+    k = common.dense(xin, params["wk"]).reshape(b, s, nh, hd)
+    v = common.dense(xin, params["wv"]).reshape(b, s, nh, hd)
+    gif = (common.dense(xin, params["w_if"])
+           + params["b_if"].astype(x.dtype)).astype(jnp.float32)
+    ig, fg = jnp.split(gif, 2, axis=-1)                      # (B,S,H)
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = constrain(v.transpose(0, 2, 1, 3), "batch", "heads", None,
+                   "channels")
+    igT = ig.transpose(0, 2, 1)
+    fgT = fg.transpose(0, 2, 1)
+
+    if decode:
+        init = None if state is None else (state.c, state.n, state.m)
+        h_out, st = mref.mlstm_recurrent(qT, kT, vT, igT, fgT,
+                                         initial_state=init)
+        new_state = MLSTMState(c=st[0], n=st[1], m=st[2],
+                               conv=jnp.zeros((0,), x.dtype))
+    else:
+        if impl in ("pallas", "interpret"):
+            h_out = mlstm_chunkwise(qT, kT, vT, igT, fgT, chunk, impl)
+        else:
+            h_out = mref.mlstm_chunkwise(qT, kT, vT, igT, fgT, chunk=chunk)
+        new_state = None
+    h_out = h_out.transpose(0, 2, 1, 3).reshape(b, s, di).astype(x.dtype)
+    out = common.dense(h_out * jax.nn.silu(z), params["w_down"])
+    if decode:
+        return out, new_state
+    return out
+
+
+# ===========================================================================
+# xLSTM sLSTM block (inherently sequential: recurrent gate connections)
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array            # (B, DI)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = _di(cfg)
+    nh = cfg.num_heads
+    hd = di // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": common.dense_init(ks[0], d, di, dtype),
+        "w_gates": common.dense_init(ks[1], di, 4 * di, dtype),
+        # block-diagonal recurrent weights, one (hd, hd) block per head
+        "r_gates": (jax.random.normal(ks[2], (4, nh, hd, hd), jnp.float32)
+                    * hd ** -0.5).astype(dtype),
+        "b_gates": jnp.zeros((4 * di,), dtype),
+        "w_down": common.dense_init(ks[3], di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def slstm_logical(cfg: ModelConfig):
+    d, di, nh = cfg.d_model, _di(cfg), cfg.num_heads
+    hd = di // nh
+    return {
+        "w_up": (("d_model", "channels"), (d, di)),
+        "w_gates": (("channels", None), (di, 4 * di)),
+        "r_gates": ((None, "heads", None, None), (4, nh, hd, hd)),
+        "b_gates": ((None,), (4 * di,)),
+        "w_down": (("channels", "d_model"), (di, d)),
+    }
+
+
+def apply_slstm(params, x, cfg: ModelConfig, *,
+                state: Optional[SLSTMState] = None, decode: bool = False):
+    b, s, d = x.shape
+    di = _di(cfg)
+    nh = cfg.num_heads
+    hd = di // nh
+    xin = common.dense(x, params["w_up"])
+    pre = (common.dense(xin, params["w_gates"])
+           + params["b_gates"].astype(x.dtype)).astype(jnp.float32)
+
+    if state is None:
+        c0 = jnp.zeros((b, di), jnp.float32)
+        n0 = jnp.zeros((b, di), jnp.float32)
+        h0 = jnp.zeros((b, di), jnp.float32)
+        m0 = jnp.full((b, di), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    r = params["r_gates"].astype(jnp.float32)                # (4,NH,hd,hd)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        hh = h.reshape(b, nh, hd)
+        rec = jnp.einsum("bnd,gnde->bgne", hh, r).reshape(b, 4, di)
+        zi, ii, fi, oi = [pre_t[:, i * di:(i + 1) * di] + rec[:, i]
+                          for i in range(4)]
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        logf = -jax.nn.softplus(-fi)                         # log sigmoid(f)
+        m_new = jnp.maximum(logf + m, ii)
+        i_p = jnp.exp(ii - m_new)
+        f_p = jnp.exp(logf + m - m_new)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        h_new = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                    pre.transpose(1, 0, 2))
+    out = common.dense(hs.transpose(1, 0, 2).astype(x.dtype),
+                       params["w_down"])
+    if decode:
+        return out, SLSTMState(c=c, n=n, h=h, m=m)
+    return out

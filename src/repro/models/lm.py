@@ -1,0 +1,228 @@
+"""Decoder-only language model covering the dense / moe / ssm / hybrid /
+vlm families.
+
+The per-layer block pattern (config.blocks()) is compressed into *segments*
+of consecutive identical kinds; each multi-block segment is executed with
+``lax.scan`` over layer-stacked parameters (small HLO, fast compiles at 512
+devices) with configurable rematerialization.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.layers import common
+from repro.layers.embedding import (embed_tokens, embedding_logical,
+                                    init_embedding, lm_logits)
+from repro.layers.norms import apply_norm, init_norm, norm_logical
+from repro.models import blocks as B
+from repro.sharding.rules import constrain
+
+
+def segments(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """Compress the block pattern into (kind, count) runs."""
+    segs: List[Tuple[str, int]] = []
+    for kind in cfg.blocks():
+        if segs and segs[-1][0] == kind:
+            segs[-1] = (kind, segs[-1][1] + 1)
+        else:
+            segs.append((kind, 1))
+    return segs
+
+
+def periodic_segments(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """Detect a repeating *unit* (e.g. gemma2's (local, global)) so that
+    alternating patterns still scan.  Returns [(unit_kinds, repeats)]."""
+    blocks = cfg.blocks()
+    n = len(blocks)
+    for p in (1, 2, 3, 4):
+        if n % p == 0 and len(set(blocks[i::p][0] for i in range(p))) >= 0:
+            unit = blocks[:p]
+            if all(blocks[i] == unit[i % p] for i in range(n)):
+                return [(tuple(unit), n // p)]
+    # fall back to plain runs
+    return [((k,), c) for k, c in segments(cfg)]
+
+
+@dataclass
+class LM:
+    cfg: ModelConfig
+    parallel: ParallelConfig = ParallelConfig()
+
+    # ------------------------------------------------------------------
+    @property
+    def segs(self):
+        if self.parallel.scan_layers:
+            return periodic_segments(self.cfg)
+        return [((k,), 1) for k in self.cfg.blocks()]
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        keys = jax.random.split(key, len(self.segs) + 2)
+        params: dict = {"embedding": init_embedding(keys[0], cfg, dtype),
+                        "final_norm": init_norm(cfg.d_model, cfg.norm_type,
+                                                dtype)}
+        if cfg.modality != "text":
+            from repro.layers.frontend import init_frontend
+            params["frontend"] = init_frontend(keys[1], cfg, dtype)
+        for si, (unit, reps) in enumerate(self.segs):
+            kseg = jax.random.split(keys[si + 2], reps)
+
+            def init_unit(k):
+                ku = jax.random.split(k, len(unit))
+                return {f"u{i}": B.init_block(ku[i], cfg, unit[i], dtype)
+                        for i in range(len(unit))}
+
+            if reps == 1:
+                params[f"seg{si}"] = init_unit(kseg[0])
+            else:
+                params[f"seg{si}"] = common.stack_params(
+                    [init_unit(k) for k in kseg])
+        return params
+
+    def logical(self) -> dict:
+        cfg = self.cfg
+        tree: dict = {"embedding": embedding_logical(cfg),
+                      "final_norm": norm_logical(cfg.d_model, cfg.norm_type)}
+        if cfg.modality != "text":
+            from repro.layers.frontend import frontend_logical
+            tree["frontend"] = frontend_logical(cfg)
+        for si, (unit, reps) in enumerate(self.segs):
+            unit_tree = {f"u{i}": B.block_logical(cfg, unit[i])
+                         for i in range(len(unit))}
+            if reps > 1:
+                unit_tree = common.stack_logical(unit_tree)
+            tree[f"seg{si}"] = unit_tree
+        return tree
+
+    # ------------------------------------------------------------------
+    def _unit_fn(self, unit, *, positions, impl=None):
+        cfg = self.cfg
+
+        def run(x, unit_params):
+            for i, kind in enumerate(unit):
+                x = B.apply_block(unit_params[f"u{i}"], x, cfg, kind,
+                                  positions=positions, impl=impl)
+            return x
+
+        if self.parallel.remat == "full":
+            run = jax.checkpoint(run)
+        elif self.parallel.remat == "selective":
+            run = jax.checkpoint(
+                run, policy=jax.checkpoint_policies.
+                dots_with_no_batch_dims_saveable)
+        return run
+
+    def hidden_states(self, params, x, *, positions, impl=None):
+        """Backbone forward: embedded input -> final-norm hidden states."""
+        for si, (unit, reps) in enumerate(self.segs):
+            run = self._unit_fn(unit, positions=positions, impl=impl)
+            p = params[f"seg{si}"]
+            if reps == 1:
+                x = run(x, p)
+            else:
+                x, _ = jax.lax.scan(
+                    lambda c, pp: (run(c, pp), None), x, p)
+        return apply_norm(params["final_norm"], x, self.cfg.norm_type,
+                          self.cfg.norm_eps)
+
+    def apply(self, params, tokens=None, *, inputs_embeds=None,
+              positions=None, impl=None):
+        """Forward to logits.  tokens: (B, S) int32 or inputs_embeds
+        (B, S, D) for the vlm/audio stubs."""
+        cfg = self.cfg
+        if inputs_embeds is not None:
+            x = inputs_embeds.astype(jnp.dtype(cfg.dtype))
+            if "frontend" in params:
+                from repro.layers.frontend import apply_frontend
+                x = apply_frontend(params["frontend"], x, cfg)
+        else:
+            x = embed_tokens(params["embedding"], tokens, cfg)
+        if positions is None:
+            b, s = x.shape[:2]
+            pos2d = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32),
+                                     (b, s))
+            positions = (jnp.broadcast_to(pos2d, (3, b, s))
+                         if cfg.rope_type == "mrope" else pos2d)
+        x = self.hidden_states(params, x, positions=positions, impl=impl)
+        return lm_logits(params["embedding"] if cfg.tie_embeddings
+                         else params["embedding"], x, cfg)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        cache = {}
+        for si, (unit, reps) in enumerate(self.segs):
+            def unit_cache():
+                return {f"u{i}": B.init_block_cache(cfg, unit[i], batch,
+                                                    max_seq, dtype)
+                        for i in range(len(unit))}
+            if reps == 1:
+                cache[f"seg{si}"] = unit_cache()
+            else:
+                cache[f"seg{si}"] = common.stack_params(
+                    [unit_cache() for _ in range(reps)])
+        return cache
+
+    def cache_logical(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        tree = {}
+        for si, (unit, reps) in enumerate(self.segs):
+            unit_tree = {f"u{i}": B.block_cache_logical(cfg, unit[i], batch,
+                                                        max_seq)
+                         for i in range(len(unit))}
+            if reps > 1:
+                unit_tree = common.stack_logical(unit_tree)
+            tree[f"seg{si}"] = unit_tree
+        return tree
+
+    def decode_step(self, params, token, cache, pos, *, impl=None):
+        """token: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
+        cfg = self.cfg
+        x = embed_tokens(params["embedding"], token[:, None], cfg)
+        b = x.shape[0]
+        new_cache = {}
+        for si, (unit, reps) in enumerate(self.segs):
+
+            def run(x, unit_params, unit_cache):
+                ncache = {}
+                for i, kind in enumerate(unit):
+                    x, c = B.apply_block_decode(
+                        unit_params[f"u{i}"], x, cfg, kind,
+                        unit_cache[f"u{i}"], pos=pos, impl=impl)
+                    ncache[f"u{i}"] = c
+                return x, ncache
+
+            p, c = params[f"seg{si}"], cache[f"seg{si}"]
+            if reps == 1:
+                x, nc = run(x, p, c)
+            else:
+                def body(carry, pc):
+                    pp, cc = pc
+                    y, nc = run(carry, pp, cc)
+                    return y, nc
+                x, nc = jax.lax.scan(body, x, (p, c))
+            new_cache[f"seg{si}"] = nc
+        x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        logits = lm_logits(params["embedding"], x, cfg)
+        return logits[:, 0], new_cache
+
+    # ------------------------------------------------------------------
+    def loss(self, params, tokens, labels, *, impl=None):
+        """Mean next-token cross entropy; labels < 0 are masked."""
+        logits = self.apply(params, tokens, impl=impl).astype(jnp.float32)
+        mask = labels >= 0
+        lab = jnp.maximum(labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

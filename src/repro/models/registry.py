@@ -1,0 +1,13 @@
+"""Model factory: config -> model object (LM or EncDec)."""
+from __future__ import annotations
+
+from repro.config import ModelConfig, ParallelConfig
+
+
+def build_model(cfg: ModelConfig, parallel: ParallelConfig = None):
+    parallel = parallel or ParallelConfig()
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import EncDec
+        return EncDec(cfg, parallel)
+    from repro.models.lm import LM
+    return LM(cfg, parallel)

@@ -1,0 +1,2 @@
+from repro.quant.int8 import (dequantize_tree, quantize_tree,  # noqa: F401
+                              quantized_size_bytes)

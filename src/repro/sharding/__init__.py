@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    AxisRules, axis_rules, constrain, current_rules, param_sharding_tree,
+    logical_to_spec,
+)

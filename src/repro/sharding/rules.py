@@ -1,0 +1,179 @@
+"""Logical-axis sharding rules (GSPMD guidance layer).
+
+Model code annotates tensors with *logical* axis names
+(``constrain(x, "batch", "seq", None)``); a context-scoped rule table maps
+logical names to mesh axes.  Parameters carry logical axes in their
+initializers and get NamedShardings from the same table, so one rule change
+re-shards the whole model (the hillclimb lever).
+
+Default rule table (see DESIGN.md §4.1):
+    batch   -> (pod, data)      DP across pods and the data axis
+    seq     -> model            Megatron-style sequence/context parallelism
+    ff      -> model            column/row-parallel FFN
+    expert  -> model            EP when num_experts % model == 0
+    vocab   -> model
+    kv_seq  -> model            decode: KV cache sharded along cache seq
+    channels-> model            SSM channel sharding (mamba/mLSTM dv)
+    heads   -> None             (context-parallel attention: heads local)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class AxisRules(dict):
+    """Mapping from logical axis name -> mesh axis (str, tuple, or None)."""
+
+
+def default_rules(multi_pod: bool = False) -> AxisRules:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return AxisRules({
+        "batch": dp,
+        "seq": "model",
+        "ff": "model",
+        "expert": "model",
+        "vocab": "model",
+        "kv_seq": "model",
+        "channels": "model",
+        "heads": None,
+        "attn_row": "model",   # QKV/O weight input dim (row-parallel)
+        "d_model": None,
+        "stage": "pod",
+    })
+
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "axis_rules", default=None)
+_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "axis_mesh", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules] = None,
+               mesh: Optional[Mesh] = None):
+    """Activate a rule table (and optionally a mesh) for model code."""
+    if rules is None and mesh is not None:
+        rules = default_rules(multi_pod="pod" in mesh.axis_names)
+    t1 = _RULES.set(rules)
+    t2 = _MESH.set(mesh)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(t1)
+        _MESH.reset(t2)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _RULES.get()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def logical_to_spec(logical: Sequence[Optional[str]],
+                    rules: Optional[AxisRules] = None,
+                    mesh: Optional[Mesh] = None) -> P:
+    """Translate logical axis names to a PartitionSpec under the rules.
+
+    Drops mesh axes that do not exist (e.g. 'pod' on a single-pod mesh) and
+    axes whose dimension would not divide -- divisibility is checked by the
+    caller via ``constrain`` (which sees the array).
+    """
+    rules = rules or current_rules() or AxisRules()
+    mesh = mesh or current_mesh()
+    axes = []
+    used: set = set()
+    for name in logical:
+        ax = rules.get(name) if name else None
+        if ax is None:
+            axes.append(None)
+            continue
+        if isinstance(ax, str):
+            ax = (ax,)
+        # drop axes missing from the mesh and axes already used by an
+        # earlier dim (a tensor can map each mesh axis only once; first
+        # occurrence wins, e.g. seq beats ff for activations)
+        ax = tuple(a for a in ax
+                   if (mesh is None or a in mesh.axis_names)
+                   and a not in used)
+        used.update(ax)
+        axes.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def _divides(array_dim: int, mesh, axis) -> bool:
+    if axis is None or mesh is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else axis
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return array_dim % size == 0
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op w/o mesh).
+
+    Axes that do not divide the corresponding dimension are silently
+    dropped to None -- models with odd head/expert counts stay legal.
+    """
+    mesh = current_mesh()
+    rules = current_rules()
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_spec(logical, rules, mesh)
+    fixed = []
+    for i, ax in enumerate(spec):
+        fixed.append(ax if _divides(x.shape[i], mesh, ax) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings
+# ---------------------------------------------------------------------------
+
+def is_logical_leaf(x) -> bool:
+    """True for an (axes, shape) logical annotation.
+
+    Strict: axes entries must be str / None / tuple-of-str and shape
+    entries int / None.  (Loose checks mistake 2-field NamedTuples like
+    KVCache or MambaState for leaves and silently replicate everything
+    under them.)
+    """
+    if not (isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple) and isinstance(x[1], tuple)):
+        return False
+    axes, shape = x
+    for a in axes:
+        if a is None or isinstance(a, str):
+            continue
+        if isinstance(a, tuple) and a and all(isinstance(b, str) for b in a):
+            continue
+        return False
+    return all(d is None or isinstance(d, int) for d in shape)
+
+
+def param_sharding_tree(param_logical_tree, mesh: Mesh,
+                        rules: Optional[AxisRules] = None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    rules = rules or default_rules(multi_pod="pod" in mesh.axis_names)
+
+    def to_sharding(logical_and_shape):
+        logical, shape = logical_and_shape
+        spec = logical_to_spec(logical, rules, mesh)
+        fixed = []
+        for i, ax in enumerate(spec):
+            fixed.append(ax if _divides(shape[i], mesh, ax) else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(to_sharding, param_logical_tree,
+                        is_leaf=is_logical_leaf)

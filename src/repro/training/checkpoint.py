@@ -1,0 +1,130 @@
+"""Atomic, resumable checkpointing (numpy-backed, orbax-free).
+
+Layout:  <dir>/step_<n>/
+             manifest.json          (step, leaf paths/dtypes/shapes, extras)
+             arr_<i>.npy            one file per pytree leaf
+         <dir>/LATEST               text file naming the newest step dir
+
+Writes go to a tmp dir + atomic rename, so a host failure mid-save never
+corrupts the restore point (fault-tolerance requirement).  Async saves run
+on a daemon thread; `wait()` joins before the next save or exit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, tree: Any, extras: Optional[dict] = None,
+             async_: bool = False):
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(x) for x in leaves]
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, treedef, extras),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, treedef, extras)
+
+    def _write(self, step, host_leaves, treedef, extras):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + f".tmp{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(host_leaves),
+            "leaves": [{"dtype": str(a.dtype), "shape": list(a.shape)}
+                       for a in host_leaves],
+            "extras": extras or {},
+            "time": time.time(),
+        }
+        for i, a in enumerate(host_leaves):
+            # numpy can't (de)serialize ml_dtypes (bfloat16 etc.); store
+            # raw bytes and reconstruct from the manifest dtype+shape
+            if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+                a = np.ascontiguousarray(a).view(np.uint8)
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic commit
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and ".tmp" not in d)
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ---------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        latest = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        with open(latest) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.dir, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``template`` (shapes must match).
+        ``shardings`` optionally re-shards leaves on load (elastic resume
+        onto a different mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = _flatten(template)
+        assert manifest["n_leaves"] == len(leaves), "tree structure changed"
+        out = []
+        shard_leaves = (jax.tree.flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves))
+        for i, (ref, sh) in enumerate(zip(leaves, shard_leaves)):
+            a = np.load(os.path.join(d, f"arr_{i}.npy"))
+            meta = manifest["leaves"][i]
+            if a.dtype == np.uint8 and str(ref.dtype) == meta["dtype"] \
+                    and np.dtype(ref.dtype).kind not in "u":
+                a = a.view(np.dtype(str(ref.dtype))).reshape(meta["shape"])
+            arr = jnp.asarray(a, dtype=ref.dtype)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            out.append(arr)
+        return jax.tree.unflatten(treedef, out), manifest

@@ -1,0 +1,78 @@
+"""Distributed train step: loss -> grads (with microbatch accumulation)
+-> AdamW, under GSPMD shardings from the logical rule table."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig, TrainConfig
+from repro.training import optimizer as opt
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: opt.AdamWState
+
+
+def init_train_state(model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=opt.init_adamw(params))
+
+
+def make_loss_fn(model, cfg: ModelConfig):
+    def loss_fn(params, batch):
+        if cfg.is_encoder_decoder:
+            return model.loss(params, batch["enc_embeds"], batch["tokens"],
+                              batch["labels"])
+        if cfg.modality == "vision_stub":
+            logits = model.apply(params,
+                                 inputs_embeds=batch["inputs_embeds"],
+                                 positions=batch.get("positions"))
+            labels = batch["labels"]
+            mask = labels >= 0
+            lab = jnp.maximum(labels, 0)
+            lf = logits.astype(jnp.float32)
+            logz = jax.nn.logsumexp(lf, axis=-1)
+            gold = jnp.take_along_axis(lf, lab[..., None], axis=-1)[..., 0]
+            return jnp.sum((logz - gold) * mask) / jnp.maximum(
+                jnp.sum(mask), 1)
+        return model.loss(params, batch["tokens"], batch["labels"])
+    return loss_fn
+
+
+def make_train_step(model, cfg: ModelConfig, parallel: ParallelConfig,
+                    train_cfg: TrainConfig):
+    loss_fn = make_loss_fn(model, cfg)
+    n_micro = parallel.microbatches
+
+    def train_step(state: TrainState, batch):
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        params, opt_state, om = opt.adamw_update(
+            grads, state.opt, state.params, train_cfg)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=params, opt=opt_state), metrics
+
+    return train_step

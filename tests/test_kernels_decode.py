@@ -1,0 +1,46 @@
+"""flash_decode kernel vs oracle across lengths/windows/GQA."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode.kernel import flash_decode_fwd
+from repro.kernels.fastattn.ref import decode_reference
+
+CASES = [
+    (2, 10, 2, 1024, 64, [1000, 321], None, None),
+    (2, 4, 4, 512, 64, [512, 77], None, None),
+    (2, 8, 2, 1024, 64, [900, 400], 256, None),
+    (1, 4, 1, 512, 32, [511], None, 30.0),
+    (3, 2, 1, 64, 16, [1, 33, 64], None, None),
+    (1, 16, 2, 2048, 128, [2048], 512, None),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_decode_kernel(case):
+    b, hq, hkv, s, d, lens, window, softcap = case
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, hq, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    kv_len = jnp.asarray(lens, jnp.int32)
+    ref = decode_reference(q, k, v, kv_len, window=window,
+                           softcap=softcap)[:, :, 0]
+    out = flash_decode_fwd(q[:, :, 0], k, v, kv_len, window=window,
+                           softcap=softcap, block_kv=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=2e-5)
+
+
+def test_decode_block_size_invariance():
+    rng = np.random.default_rng(1)
+    b, hq, hkv, s, d = 2, 8, 2, 768, 64
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    kv_len = jnp.asarray([700, 123], jnp.int32)
+    outs = [flash_decode_fwd(q, k, v, kv_len, block_kv=bk, interpret=True)
+            for bk in (128, 256, 768)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,105 @@
+"""FastAttention kernel vs pure-jnp oracle: shape/dtype/feature sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fastattn.kernel import fastattn_fwd
+from repro.kernels.fastattn.ops import fastattn
+from repro.kernels.fastattn.ref import flash_reference, standard_attention
+
+CASES = [
+    # (B, Hq, Hkv, Sq, Skv, D, causal, window, softcap, bq, bkv1, bkv2)
+    (2, 4, 2, 384, 384, 64, True, None, None, 128, 256, 128),
+    (1, 2, 2, 512, 512, 64, True, 100, None, 128, 256, 128),
+    (1, 2, 1, 256, 256, 64, True, None, 30.0, 128, 256, 128),
+    (1, 3, 1, 300, 200, 64, True, None, None, 128, 256, 128),
+    (1, 2, 2, 256, 384, 64, False, None, None, 128, 256, 128),
+    (1, 2, 1, 512, 512, 32, True, 200, 50.0, 128, 512, 128),
+    (1, 1, 1, 64, 64, 16, True, None, None, 128, 256, 128),
+    (2, 8, 2, 256, 256, 128, True, None, None, 256, 256, 256),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_kernel_matches_standard_attention(case):
+    b, hq, hkv, sq, skv, d, causal, window, softcap, bq, bkv1, bkv2 = case
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), jnp.float32)
+    ref = standard_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    out = fastattn_fwd(q, k, v, causal=causal, window=window,
+                       softcap=softcap, block_q=bq, block_kv1=bkv1,
+                       block_kv2=bkv2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_kernel_dtypes(dtype, tol):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), dtype)
+    ref = standard_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32))
+    out = fastattn_fwd(q, k, v, block_q=128, block_kv1=256, block_kv2=128,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), rtol=0.05, atol=tol * 10)
+
+
+def test_q_offset_chunked_prefill_equivalence():
+    """Chunked prefill with q_offset must equal one-shot prefill."""
+    rng = np.random.default_rng(3)
+    b, h, s, d = 1, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    full = fastattn_fwd(q, k, v, block_q=128, block_kv1=128,
+                        block_kv2=128, interpret=True)
+    halves = []
+    for off in (0, 256):
+        halves.append(fastattn_fwd(
+            q[:, :, off:off + 256], k[:, :, :off + 256],
+            v[:, :, :off + 256], q_offset=off, block_q=128,
+            block_kv1=128, block_kv2=128, interpret=True))
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(halves, axis=2)),
+                               np.asarray(full), rtol=1e-4, atol=2e-5)
+
+
+def test_flash_reference_matches_standard():
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(2, 4, 200, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 300, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 300, 32)), jnp.float32)
+    for kw in [dict(causal=True), dict(causal=False),
+               dict(causal=True, window=64),
+               dict(causal=True, softcap=20.0)]:
+        ref = standard_attention(q, k, v, **kw)
+        out = flash_reference(q, k, v, block_kv=128, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=2e-5)
+
+
+def test_custom_vjp_backward_close_to_standard():
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(fastattn(q, k, v, True, None, None, None, 0,
+                                128, 128, 128, "interpret") ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(standard_attention(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)

@@ -1,0 +1,86 @@
+"""T4 CPU-GPU cooperative strategy: planner formulas + host engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_model_config
+from repro.core.offload import (HostOffloadEngine, OffloadLatencyModel,
+                                max_context_length, plan_offload, table3_row)
+
+
+def test_planner_matches_paper_formula_mha():
+    """For an MHA + 2-matrix-FFN model our M_w reduces to the paper's
+    L(8 H1^2 + 4 H1 H2) (Eq. 17)."""
+    cfg = get_model_config("pangu-38b")     # MHA, gelu MLP (2 matrices)
+    p = plan_offload(cfg, batch=1, seq_len=16384, gen_len=64, n_devices=8,
+                     device_memory_gb=16)
+    h1, h2, L = cfg.d_model, cfg.d_ff, cfg.num_layers
+    paper_mw = L * (8 * h1 * h1 + 4 * h1 * h2)
+    # within 5% (we add norms/bias-free terms the paper drops)
+    assert abs(p.bytes_weights - paper_mw) / paper_mw < 0.05
+    # Eq. 18: M_kv = 4 B H1 (S+O) / n
+    assert p.bytes_kv_layer == pytest.approx(
+        4 * 1 * h1 * (16384 + 64) / 8, rel=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seq=st.integers(1024, 1 << 19), mem=st.floats(8, 80))
+def test_planner_invariants(seq, mem):
+    cfg = get_model_config("pangu-38b")
+    p = plan_offload(cfg, batch=1, seq_len=seq, gen_len=64, n_devices=8,
+                     device_memory_gb=mem)
+    assert 0 <= p.l_gpu <= cfg.num_layers
+    assert p.l_gpu + p.l_cpu == cfg.num_layers
+    if not p.needs_offload:
+        assert p.l_cpu == 0
+
+
+def test_max_context_extension():
+    """The cooperative strategy must extend max context by >= 4x on a
+    memory-tight node (the paper's 16K -> 256K claim shape)."""
+    cfg = get_model_config("pangu-38b")
+    r = max_context_length(cfg, batch=1, n_devices=8, device_memory_gb=16,
+                           host_memory_gb=768)
+    assert r["cooperative"] >= 4 * max(r["device_only"], 1)
+    assert r["cooperative"] >= 256 * 1024 or r["device_only"] == 0
+
+
+def test_table3_speedup_regime():
+    """Cooperative beats classical offloading at long context (Table 3:
+    1.27-1.48x) under the paper's PCIe/CPU constants."""
+    cfg = get_model_config("pangu-38b")
+    row = table3_row(cfg, 262144, device_memory_gb=16)
+    assert row["offload"]
+    assert row["speedup"] > 1.1
+    # Off_Upload is tiny & ~constant (paper: fixed-dim results only)
+    assert row["coop_offupload_s"] < 0.01 * row["coop_cpu_calc_s"] * 100
+
+
+def test_host_engine_end_to_end():
+    cfg = get_model_config("whisper-small")   # small dims, quick
+    from repro.core.offload import OffloadPlan
+    plan = OffloadPlan(l_gpu=1, l_cpu=1, bytes_weights=0, bytes_kv_layer=0,
+                       bytes_mid=0, bytes_vocab=0, device_budget=0,
+                       needs_offload=True)
+    eng = HostOffloadEngine(cfg, plan, max_batch=2, max_seq=32)
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(2, 8, cfg.num_kv_heads,
+                                     cfg.head_dim)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=k.shape), jnp.float32)
+    eng.prefill_offload(0, k, v)
+    q = jnp.asarray(rng.normal(size=(2, 1, cfg.num_heads, cfg.head_dim)),
+                    jnp.float32)
+    out = eng.decode_attention(0, q, kv_len=[8, 8])
+    assert out.shape == (2, 1, cfg.num_heads, cfg.head_dim)
+    # oracle: same attention computed directly
+    from repro.kernels.fastattn.ref import decode_reference
+    ref = decode_reference(q.transpose(0, 2, 1, 3),
+                           jnp.pad(k, ((0, 0), (0, 24), (0, 0), (0, 0))
+                                   ).transpose(0, 2, 1, 3),
+                           jnp.pad(v, ((0, 0), (0, 24), (0, 0), (0, 0))
+                                   ).transpose(0, 2, 1, 3),
+                           jnp.asarray([8, 8])).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,49 @@
+"""Weight-only int8: error bounds + end-to-end orthogonality (paper D.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ParallelConfig, get_model_config, reduce_for_smoke
+from repro.models import build_model
+from repro.quant.int8 import (dequantize_tree, quantize_tensor,
+                              quantize_tree, quantized_size_bytes)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), rows=st.integers(1, 64),
+       cols=st.integers(1, 64))
+def test_per_channel_error_bound(seed, rows, cols):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)) *
+                    rng.uniform(0.01, 10), jnp.float32)
+    qt = quantize_tensor(w)
+    wd = (qt.q.astype(jnp.float32) * qt.scale)
+    # symmetric per-channel: |err| <= scale/2 per element
+    err = np.abs(np.asarray(wd - w))
+    bound = np.asarray(qt.scale) / 2 + 1e-9
+    assert (err <= np.broadcast_to(bound, err.shape) + 1e-7).all()
+
+
+def test_e2e_orthogonality_logit_drift():
+    """Paper D.2: quantization composes with FastAttention.  int8 weights
+    must not change greedy decisions on a smoke model."""
+    cfg = reduce_for_smoke(get_model_config("llama2-7b"))
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    base = model.apply(params, toks).astype(jnp.float32)
+    qparams = quantize_tree(params)
+    deq = dequantize_tree(qparams, dtype=jnp.float32)
+    quant = model.apply(deq, toks).astype(jnp.float32)
+    # bounded drift + identical greedy tokens
+    rel = float(jnp.max(jnp.abs(quant - base)) /
+                jnp.maximum(jnp.max(jnp.abs(base)), 1e-9))
+    assert rel < 0.15, rel
+    agree = float(jnp.mean((jnp.argmax(quant, -1) ==
+                            jnp.argmax(base, -1)).astype(jnp.float32)))
+    assert agree > 0.95, agree
+    # ~2x weight compression (int8 + f32 scales vs f32)
+    orig = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    assert quantized_size_bytes(qparams) < 0.6 * orig

@@ -1,0 +1,88 @@
+"""Property tests for the tiling-mask strategy (T2): the (2M)^2 M-mask
+must reconstruct ANY causal / banded B-mask exactly (paper Fig. 3)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiling_mask as tm
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    bq=st.integers(1, 32),
+    bk=st.integers(1, 32),
+    q0=st.integers(0, 256),
+    k0=st.integers(0, 256),
+)
+def test_bmask_equals_dense_slice(m, bq, bk, q0, k0):
+    bq = min(bq, m)
+    bk = min(bk, m)
+    cls = tm.classify_block(q0, k0, bq, bk, causal=True)
+    dense = np.asarray(tm.dense_mask(bq, bk, causal=True,
+                                     q_offset=q0 - k0))  # delta semantics
+    # dense_mask(q_offset=q0) compares (q0+r >= c); block mask compares
+    # (q0+r >= k0+c) == ((q0-k0)+r >= c)
+    if cls == tm.SKIP:
+        assert not dense.any()
+        return
+    if cls == tm.FULL:
+        assert dense.all()
+        return
+    mm = tm.make_m_mask(m)
+    bm = np.asarray(tm.slice_bmask(mm, q0 - k0, bq, bk)) != 0
+    np.testing.assert_array_equal(bm, dense)
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    m=st.sampled_from([16, 32]),
+    bq=st.integers(1, 16),
+    bk=st.integers(1, 16),
+    q0=st.integers(0, 128),
+    k0=st.integers(0, 128),
+    window=st.integers(1, 64),
+)
+def test_band_bmask_equals_dense(m, bq, bk, q0, k0, window):
+    bq = min(bq, m)
+    bk = min(bk, m)
+    cls = tm.classify_block(q0, k0, bq, bk, causal=True, window=window)
+    dense = np.asarray(tm.dense_mask(bq, bk, causal=True, window=window,
+                                     q_offset=q0 - k0))
+    if cls == tm.SKIP:
+        assert not dense.any()
+        return
+    if cls == tm.FULL:
+        assert dense.all()
+        return
+    mm = tm.make_m_mask(m)
+    bm = np.asarray(tm.slice_band_bmask(mm, q0 - k0, window, bq, bk)) != 0
+    np.testing.assert_array_equal(bm, dense)
+
+
+@settings(max_examples=100, deadline=None)
+@given(s=st.integers(1, 4096))
+def test_memory_savings(s):
+    """M-mask memory is independent of sequence length (paper: 8GB->256KB)."""
+    assert tm.m_mask_memory_bytes(512) == (1024 * 1024)
+    if s >= 1024:
+        assert tm.mask_memory_bytes(s) > tm.m_mask_memory_bytes(512)
+
+
+def test_block_limits_cover_exactly_the_visible_blocks():
+    spec = tm.MaskSpec(causal=True, window=100)
+    first, last = spec.block_limits(8, 8, 64, 64, kv_len=512)
+    for qi in range(8):
+        for ki in range(8):
+            cls = tm.classify_block(qi * 64, ki * 64, 64, 64, causal=True,
+                                    window=100, kv_len=512)
+            inside = first[qi] <= ki <= last[qi]
+            if cls != tm.SKIP:
+                assert inside, (qi, ki)
+
+
+def test_paper_memory_table():
+    # paper: S=64K fp16 mask = 8 GB; M=512 M-mask = 256 KB (as 2-bit) --
+    # we store int8: 1 MiB, still a 8192x reduction
+    assert tm.mask_memory_bytes(65536, 2) == 8 * 2 ** 30
+    assert tm.m_mask_memory_bytes(512, 1) == 2 ** 20
