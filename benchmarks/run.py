@@ -156,8 +156,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core.tiled_allreduce import make_sharded_fused_block
 from repro.analysis.hlo import analyze_hlo_text
-mesh = jax.make_mesh((8,), ('model',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ('model',))
 rng = np.random.default_rng(0)
 b, s, h, d, dm = 1, 512, 40, 16, 640      # 40 heads / 8 = 5 per device
 q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)

@@ -95,9 +95,9 @@ class Instruction:
         depth = 0
         token = []
         for ch in self.operands_str + ",":
-            if ch == "(" or ch == "{":
+            if ch in "({[":
                 depth += 1
-            elif ch == ")" or ch == "}":
+            elif ch in ")}]":
                 depth -= 1
             if ch == "," and depth == 0:
                 t = "".join(token).strip()
@@ -113,13 +113,14 @@ class Instruction:
         """Resolve operand types: inline if typed, else via symbol table."""
         inline = _SHAPE_RE.findall(self.operands_str)
         if inline:
-            # operands carry inline types in this printing
+            # operands carry inline types in this printing; commas inside
+            # shape brackets ("f32[128,256]") must not split tokens
             depth = 0
             toks, token = [], []
             for ch in self.operands_str + ",":
-                if ch in "({":
+                if ch in "({[":
                     depth += 1
-                elif ch in ")}":
+                elif ch in ")}]":
                     depth -= 1
                 if ch == "," and depth == 0:
                     toks.append("".join(token).strip())

@@ -232,6 +232,28 @@ class ServeConfig:
     top_k: int = 0                 # 0 = greedy
     seed: int = 0
 
+    # --- paged KV + continuous batching (ServeEngine.generate_stream) ---
+    # page_size doubles as the paged decode kernel's block_kv: one page
+    # table entry == one kernel grid step.  Must be a multiple of 128
+    # (TPU lane width) on real hardware.
+    page_size: int = 128
+    # Physical pages in the shared pool (page 0 is scratch).  0 = auto:
+    # enough for max_batch sequences of max_seq_len, i.e. a dense cache's
+    # worth -- set it lower to actually oversubscribe.
+    num_pages: int = 0
+    # paged decode impl: auto | paged | paged_interpret | paged_reference
+    # (auto = Pallas kernel on TPU, jittable gather-reference elsewhere).
+    paged_impl: str = "auto"
+
+    @property
+    def max_pages_per_seq(self) -> int:
+        return -(-self.max_seq_len // self.page_size)
+
+    def pool_pages(self) -> int:
+        if self.num_pages:
+            return self.num_pages
+        return self.max_batch * self.max_pages_per_seq + 1
+
 
 @dataclass(frozen=True)
 class RunConfig:

@@ -1,0 +1,30 @@
+"""Version shims for the jax API surface used by the distribution code.
+
+Targets the current public API (``jax.shard_map`` with ``check_vma``)
+while staying runnable on the older jaxlibs found in CPU-only CI
+containers (``jax.experimental.shard_map.shard_map`` with ``check_rep``).
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                      # jax >= 0.6 public API
+    _impl = jax.shard_map
+    _LEGACY = False
+except AttributeError:                    # older jax: experimental module
+    from jax.experimental.shard_map import shard_map as _impl
+    _LEGACY = True
+
+
+def shard_map(*args, **kwargs):
+    if _LEGACY and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _impl(*args, **kwargs)
+
+
+def axis_size(axis_name):
+    """jax.lax.axis_size, or its psum(1) equivalent on older jax (only
+    valid inside shard_map/pmap bodies, same contract as the real one)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -32,6 +32,13 @@ def fast_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.transpose(0, 2, 1, 3)
 
 
+def default_paged_impl() -> str:
+    """Best paged-decode impl for the current backend: the Pallas kernel
+    on TPU, the jittable gather-reference everywhere else (the kernel
+    still runs off-TPU via interpret=True, but only for verification)."""
+    return "paged" if jax.default_backend() == "tpu" else "paged_reference"
+
+
 def fast_attention_decode(q: jax.Array, k_cache: jax.Array,
                           v_cache: jax.Array, kv_len: jax.Array, *,
                           window: Optional[int] = None,
@@ -39,12 +46,22 @@ def fast_attention_decode(q: jax.Array, k_cache: jax.Array,
                           scale: Optional[float] = None,
                           impl: str = "reference",
                           block_kv: int = 512,
-                          layout: str = "bshd") -> jax.Array:
+                          layout: str = "bshd",
+                          page_table: Optional[jax.Array] = None
+                          ) -> jax.Array:
     """Single-token decode attention.
 
     q: (B, 1, Hq, D); caches (B, S, Hkv, D) ["bshd"] or (B, Hkv, S, D)
     ["bhsd", head-major: no transpose before the contraction]; kv_len (B,).
     Returns (B, 1, Hq, D).
+
+    With ``impl in ("paged", "paged_interpret", "paged_reference")`` the
+    caches are instead global page pools (Hkv, P, page_size, D) shared by
+    every sequence, and ``page_table`` (B, n_kv) int32 maps each
+    sequence's logical KV block to its physical page (serving/paged_cache
+    owns the table).  "paged" runs the Pallas kernel (auto interpret off
+    TPU); "paged_reference" gathers the owned pages into a dense view and
+    reuses the dense oracle -- the jittable CPU path.
 
     The reference path works IN PLACE on the (B, S, Hkv, D) bf16 cache --
     no transpose, no GQA expansion, no f32 copy; einsums accumulate in f32
@@ -53,6 +70,24 @@ def fast_attention_decode(q: jax.Array, k_cache: jax.Array,
     decomposes the max/sum/PV reductions into the LSE-merge collectives of
     core/distributed_decode.py.
     """
+    if impl in ("paged", "paged_interpret", "paged_reference"):
+        if page_table is None:
+            raise ValueError(f"impl={impl!r} requires a page_table")
+        if impl == "paged_reference":
+            from repro.kernels.flash_decode.ref import paged_decode_reference
+            out = paged_decode_reference(
+                q.transpose(0, 2, 1, 3), k_cache, v_cache, page_table,
+                kv_len, window=window, softcap=softcap, scale=scale)
+            return out.transpose(0, 2, 1, 3)
+        from repro.kernels.flash_decode.ops import paged_flash_decode
+        interpret = (impl == "paged_interpret"
+                     or jax.default_backend() != "tpu")
+        out = paged_flash_decode(
+            q.transpose(0, 2, 1, 3)[:, :, 0], k_cache, v_cache, page_table,
+            kv_len, window=window, softcap=softcap, scale=scale,
+            interpret=interpret)[:, :, None]
+        return out.transpose(0, 2, 1, 3)
+
     if impl in ("pallas", "interpret"):
         from repro.kernels.flash_decode.ops import flash_decode
         qT = q.transpose(0, 2, 1, 3)

@@ -31,6 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import axis_size as _axis_size
+from repro.core.compat import shard_map as _shard_map
+
 
 def chunk_sizes(total: int, n_chunks: int, first_frac: float = 0.5,
                 align: int = 1) -> Sequence[int]:
@@ -86,7 +89,7 @@ def tiled_matmul_reducescatter(x: jax.Array, w: jax.Array, axis_name: str, *,
     Output rows are scattered along the axis: (T, D) -> (T/axis, D).
     """
     t = x.shape[0]
-    axis_size = jax.lax.axis_size(axis_name)
+    axis_size = _axis_size(axis_name)
     sizes = chunk_sizes(t, n_chunks, first_chunk_frac, align=axis_size)
     outs = []
     off = 0
@@ -104,7 +107,7 @@ def ring_matmul_allreduce(x: jax.Array, w: jax.Array, axis_name: str, *,
     per-chunk matmuls, then all-gather.  The ppermute of chunk i runs while
     chunk i+1's matmul executes -- scheduler-independent overlap."""
     t = x.shape[0]
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
     sizes = chunk_sizes(t, n_chunks, 1.0, align=n)
@@ -168,7 +171,7 @@ def fused_attention_linear(q, k, v, w_o, axis_name: str, *,
 def make_sharded_fused_block(mesh, axis_name: str = "model", **kw):
     """shard_map-wrapped fused_attention_linear over head-sharded inputs."""
     fn = functools.partial(fused_attention_linear, axis_name=axis_name, **kw)
-    return jax.shard_map(
+    return _shard_map(
         fn, mesh=mesh,
         in_specs=(P(None, None, axis_name, None),
                   P(None, None, axis_name, None),

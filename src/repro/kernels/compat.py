@@ -1,0 +1,14 @@
+"""Version shims for the Pallas TPU API surface.
+
+The kernels target the current Pallas naming; older jaxlibs in CPU-only CI
+containers still expose the ``TPU``-prefixed aliases.  Centralising the
+lookup keeps every kernel importable (and runnable under ``interpret=True``)
+across the jax versions we see in practice.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams in jax 0.4.46
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

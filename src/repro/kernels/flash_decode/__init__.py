@@ -1,1 +1,2 @@
-from repro.kernels.flash_decode.ops import flash_decode  # noqa: F401
+from repro.kernels.flash_decode.ops import (flash_decode,  # noqa: F401
+                                            paged_flash_decode)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -145,8 +147,95 @@ def flash_decode_fwd(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kv_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out[:, :, :g].reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: KV lives in a global page pool, indexed per sequence
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, **kw):
+    # Page indirection happens entirely in the BlockSpec index map; once a
+    # page is resident in VMEM the reduction is identical to the dense case.
+    del pt_ref
+    _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, **kw)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "interpret"))
+def paged_flash_decode_fwd(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           kv_len: jax.Array, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Flash decode over a paged KV cache.
+
+    q: (B, Hq, D); pages: (Hkv, P, page_size, D) global pools shared by
+    every sequence; page_table: (B, n_kv) int32 mapping logical KV block
+    ``ki`` of sequence ``b`` to its physical page; kv_len: (B,) int32.
+
+    The page size doubles as the kernel's ``block_kv``: the KV BlockSpec
+    index map resolves the logical block through the scalar-prefetched
+    page table, so the Pallas pipeline DMAs exactly the pages a sequence
+    owns (clamped to the valid [first, last] logical range -- out-of-range
+    grid steps re-fetch an owned page and are masked out, never touching
+    pages of other sequences).  Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv, _, block_kv, _ = k_pages.shape
+    n_kv = page_table.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    g_pad = max(8, g)
+    scale = scale if scale is not None else d ** -0.5
+
+    qg = q.reshape(b, hkv, g, d)
+    if g_pad != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+
+    def q_map(bi, hi, ki, pt_ref, len_ref):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, ki, pt_ref, len_ref):
+        last = jnp.maximum(len_ref[bi] - 1, 0) // block_kv
+        ki = jnp.minimum(ki, last)
+        if window is not None:
+            first = jnp.maximum(len_ref[bi] - window, 0) // block_kv
+            ki = jnp.maximum(ki, first)
+        return (hi, pt_ref[bi, ki], 0, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, window=window, softcap=softcap, scale=scale,
+        block_kv=block_kv, n_kv=n_kv, g_pad=g_pad)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hkv, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, g_pad, d), q_map),
+                pl.BlockSpec((1, 1, block_kv, d), kv_map),
+                pl.BlockSpec((1, 1, block_kv, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g_pad, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((g_pad, d), jnp.float32),
+                pltpu.VMEM((g_pad, LANES), jnp.float32),
+                pltpu.VMEM((g_pad, LANES), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g_pad, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+      qg, k_pages, v_pages)
     return out[:, :, :g].reshape(b, hq, d)

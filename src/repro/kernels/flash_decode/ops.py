@@ -1,9 +1,10 @@
-"""Jit'd wrapper for the flash-decode kernel (inference only, no vjp)."""
+"""Jit'd wrappers for the flash-decode kernels (inference only, no vjp)."""
 from __future__ import annotations
 
 from typing import Optional
 
-from repro.kernels.flash_decode.kernel import flash_decode_fwd
+from repro.kernels.flash_decode.kernel import (flash_decode_fwd,
+                                               paged_flash_decode_fwd)
 
 
 def flash_decode(q, k_cache, v_cache, kv_len, *,
@@ -16,3 +17,15 @@ def flash_decode(q, k_cache, v_cache, kv_len, *,
     return flash_decode_fwd(
         q, k_cache, v_cache, kv_len, window=window, softcap=softcap,
         scale=scale, block_kv=block_kv, interpret=interpret)
+
+
+def paged_flash_decode(q, k_pages, v_pages, page_table, kv_len, *,
+                       window: Optional[int] = None,
+                       softcap: Optional[float] = None,
+                       scale: Optional[float] = None,
+                       interpret: bool = False):
+    """Decode attention over a paged cache: q (B, Hq, D), pages
+    (Hkv, P, page_size, D), page_table (B, n_kv) int32."""
+    return paged_flash_decode_fwd(
+        q, k_pages, v_pages, page_table, kv_len, window=window,
+        softcap=softcap, scale=scale, interpret=interpret)

@@ -1,2 +1,36 @@
-"""Oracle for flash_decode: re-exports the fastattn decode reference."""
+"""Oracles for flash_decode: dense re-export + paged-gather reference.
+
+``paged_gather`` materialises the dense (B, Hkv, S, D) view of a paged
+pool; ``paged_decode_reference`` chains it with the dense decode oracle so
+paged kernels have an f32-softmax reference on any backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
 from repro.kernels.fastattn.ref import decode_reference  # noqa: F401
+
+
+def paged_gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """pages: (Hkv, P, page_size, D); page_table: (B, n_kv) int32.
+
+    Returns the dense per-sequence view (B, Hkv, n_kv * page_size, D).
+    """
+    g = pages[:, page_table]                   # (Hkv, B, n_kv, ps, D)
+    hkv, b, n_kv, ps, d = g.shape
+    return g.transpose(1, 0, 2, 3, 4).reshape(b, hkv, n_kv * ps, d)
+
+
+def paged_decode_reference(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           kv_len: jax.Array, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None) -> jax.Array:
+    """q: (B, Hq, 1, D) against paged pools.  Returns (B, Hq, 1, D)."""
+    k = paged_gather(k_pages, page_table)
+    v = paged_gather(v_pages, page_table)
+    return decode_reference(q, k, v, kv_len, window=window, softcap=softcap,
+                            scale=scale)

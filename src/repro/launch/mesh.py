@@ -14,19 +14,26 @@ import jax
 from repro.config import ParallelConfig
 
 
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """jax.make_mesh with explicit Auto axis types where the installed
+    jax supports them (jax.sharding.AxisType landed after 0.4.37; older
+    versions are Auto-only, so omitting the kwarg is equivalent)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(parallel: ParallelConfig):
     """Mesh matching an arbitrary ParallelConfig (tests use small ones)."""
-    shape = parallel.mesh_shape()
-    axes = parallel.mesh_axes()
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(parallel.mesh_shape(), parallel.mesh_axes())
 
 
 def parallel_for_mesh(mesh) -> ParallelConfig:

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core.fastattention import fast_attention, fast_attention_decode
+from repro.core.fastattention import (default_paged_impl, fast_attention,
+                                      fast_attention_decode)
 from repro.layers import common, rotary
 from repro.sharding.rules import constrain
 
@@ -171,3 +172,51 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
     else:
         shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: KV pages shared across sequences via a page table
+# ---------------------------------------------------------------------------
+
+def init_kv_pages(cfg: ModelConfig, num_pages: int, page_size: int,
+                  dtype) -> KVCache:
+    """Global page pools (Hkv, P, page_size, D).  Every sequence's cache
+    is a subset of pages named by its page-table row; batch size does not
+    appear in the storage shape -- the pool is the memory budget."""
+    shape = (cfg.num_kv_heads, num_pages, page_size, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def apply_attention_decode_paged(params, x, cfg: ModelConfig,
+                                 cache: KVCache, *, page_table, pos,
+                                 window: Optional[int] = None,
+                                 impl: Optional[str] = None):
+    """One-token decode against paged KV pools.
+
+    x: (B, 1, D); pos: (B,) int32 per-sequence positions (ragged batch --
+    unlike the dense path there is no shared scalar position);
+    page_table: (B, n_kv) int32.  The new K/V row is scattered into page
+    ``page_table[b, pos // page_size]`` at offset ``pos % page_size``;
+    attention then reads kv_len = pos + 1 tokens through the table.
+    Returns (out (B, 1, D), new KVCache of pools).
+    """
+    impl = impl or default_paged_impl()
+    b = x.shape[0]
+    positions = pos.astype(jnp.int32)[:, None]
+    if cfg.rope_type == "mrope":   # text continuation: t=h=w=pos
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+    ps = cache.k.shape[2]
+    page = page_table[jnp.arange(b), pos // ps]
+    off = pos % ps
+    # (B, 1, Hkv, D) -> (Hkv, B, D) rows scattered at [:, page[b], off[b]]
+    k = cache.k.at[:, page, off].set(
+        k_new[:, 0].astype(cache.k.dtype).transpose(1, 0, 2))
+    v = cache.v.at[:, page, off].set(
+        v_new[:, 0].astype(cache.v.dtype).transpose(1, 0, 2))
+    kv_len = pos.astype(jnp.int32) + 1
+    out = fast_attention_decode(
+        q, k, v, kv_len, window=window, softcap=cfg.attn_logit_softcap,
+        impl=impl, page_table=page_table)
+    out = out.reshape(b, 1, cfg.q_dim)
+    return common.dense(out, params["wo"]), KVCache(k, v)

@@ -112,6 +112,17 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
     raise ValueError(kind)
 
 
+def init_block_pages(cfg: ModelConfig, kind: str, num_pages: int,
+                     page_size: int, dtype):
+    """Paged-serving cache for one block: KV page pools for attention
+    kinds.  Recurrent kinds (mlstm/slstm/hymba) carry O(1) per-slot state
+    -- nothing to page -- and are not yet wired into the paged engine."""
+    if kind in ("attn", "attn_local", "moe"):
+        return attn_mod.init_kv_pages(cfg, num_pages, page_size, dtype)
+    raise NotImplementedError(
+        f"paged serving supports attention-cache blocks only, got {kind!r}")
+
+
 def block_cache_logical(cfg: ModelConfig, kind: str, batch: int,
                         max_seq: int):
     """Logical axes for every cache leaf (mirrors init_block_cache)."""
@@ -153,6 +164,22 @@ def block_cache_logical(cfg: ModelConfig, kind: str, batch: int,
 # forward (train / prefill)
 # ---------------------------------------------------------------------------
 
+def _attn_block_tail(params, x, a, cfg: ModelConfig, kind: str):
+    """Residual + FFN half of an attention block -- shared by the train,
+    dense-decode and paged-decode paths so they cannot diverge."""
+    if cfg.post_norm:
+        a = apply_norm(params["ln1_post"], a, cfg.norm_type, cfg.norm_eps)
+    x = x + a
+    h2 = apply_norm(params["ln2"], x, cfg.norm_type, cfg.norm_eps)
+    if kind == "moe":
+        f = moe_mod.apply_moe(params["moe"], h2, cfg)
+    else:
+        f = mlp_mod.apply_mlp(params["mlp"], h2, cfg.mlp_type)
+    if cfg.post_norm:
+        f = apply_norm(params["ln2_post"], f, cfg.norm_type, cfg.norm_eps)
+    return x + f
+
+
 def apply_block(params, x, cfg: ModelConfig, kind: str, *, positions,
                 impl: Optional[str] = None):
     d = cfg.d_model
@@ -161,17 +188,7 @@ def apply_block(params, x, cfg: ModelConfig, kind: str, *, positions,
         a = attn_mod.apply_attention(
             params["attn"], h, cfg, positions=positions,
             window=_window(cfg, kind), impl=impl)
-        if cfg.post_norm:
-            a = apply_norm(params["ln1_post"], a, cfg.norm_type, cfg.norm_eps)
-        x = x + a
-        h2 = apply_norm(params["ln2"], x, cfg.norm_type, cfg.norm_eps)
-        if kind == "moe":
-            f = moe_mod.apply_moe(params["moe"], h2, cfg)
-        else:
-            f = mlp_mod.apply_mlp(params["mlp"], h2, cfg.mlp_type)
-        if cfg.post_norm:
-            f = apply_norm(params["ln2_post"], f, cfg.norm_type, cfg.norm_eps)
-        x = x + f
+        x = _attn_block_tail(params, x, a, cfg, kind)
     elif kind in ("hymba", "hymba_local"):
         a = attn_mod.apply_attention(
             params["attn"], h, cfg, positions=positions,
@@ -199,6 +216,23 @@ def apply_block(params, x, cfg: ModelConfig, kind: str, *, positions,
 # decode (one token, with cache)
 # ---------------------------------------------------------------------------
 
+def apply_block_decode_paged(params, x, cfg: ModelConfig, kind: str,
+                             cache, *, page_table, pos,
+                             impl: Optional[str] = None):
+    """Paged one-token decode: like apply_block_decode but positions are
+    per-sequence (B,) and the KV cache is a shared page pool."""
+    if kind not in ("attn", "attn_local", "moe"):
+        raise NotImplementedError(
+            f"paged serving supports attention-cache blocks only, "
+            f"got {kind!r}")
+    h = apply_norm(params["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    a, cache = attn_mod.apply_attention_decode_paged(
+        params["attn"], h, cfg, cache, page_table=page_table, pos=pos,
+        window=_window(cfg, kind), impl=impl)
+    x = _attn_block_tail(params, x, a, cfg, kind)
+    return constrain(x, "batch", None, None), cache
+
+
 def apply_block_decode(params, x, cfg: ModelConfig, kind: str, cache, *,
                        pos, impl: Optional[str] = None):
     h = apply_norm(params["ln1"], x, cfg.norm_type, cfg.norm_eps)
@@ -206,17 +240,7 @@ def apply_block_decode(params, x, cfg: ModelConfig, kind: str, cache, *,
         a, cache = attn_mod.apply_attention_decode(
             params["attn"], h, cfg, cache, pos=pos,
             window=_window(cfg, kind), impl=impl)
-        if cfg.post_norm:
-            a = apply_norm(params["ln1_post"], a, cfg.norm_type, cfg.norm_eps)
-        x = x + a
-        h2 = apply_norm(params["ln2"], x, cfg.norm_type, cfg.norm_eps)
-        if kind == "moe":
-            f = moe_mod.apply_moe(params["moe"], h2, cfg)
-        else:
-            f = mlp_mod.apply_mlp(params["mlp"], h2, cfg.mlp_type)
-        if cfg.post_norm:
-            f = apply_norm(params["ln2_post"], f, cfg.norm_type, cfg.norm_eps)
-        x = x + f
+        x = _attn_block_tail(params, x, a, cfg, kind)
     elif kind in ("hymba", "hymba_local"):
         a, kv = attn_mod.apply_attention_decode(
             params["attn"], h, cfg, cache["kv"], pos=pos,

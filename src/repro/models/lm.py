@@ -173,6 +173,25 @@ class LM:
                     [unit_cache() for _ in range(reps)])
         return cache
 
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        """Paged-serving cache: per-layer KV page pools (no batch dim --
+        serving/paged_cache.PagedKVCache owns the page table that carves
+        the pools into per-sequence caches)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        cache = {}
+        for si, (unit, reps) in enumerate(self.segs):
+            def unit_cache():
+                return {f"u{i}": B.init_block_pages(
+                            cfg, unit[i], num_pages, page_size, dtype)
+                        for i in range(len(unit))}
+            if reps == 1:
+                cache[f"seg{si}"] = unit_cache()
+            else:
+                cache[f"seg{si}"] = common.stack_params(
+                    [unit_cache() for _ in range(reps)])
+        return cache
+
     def cache_logical(self, batch: int, max_seq: int):
         cfg = self.cfg
         tree = {}
@@ -185,20 +204,22 @@ class LM:
             tree[f"seg{si}"] = unit_tree
         return tree
 
-    def decode_step(self, params, token, cache, pos, *, impl=None):
-        """token: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
+    def _decode_segments(self, params, token, cache, block_fn):
+        """Shared decode-step skeleton: embed the token, thread (x, cache)
+        through every segment (scanning stacked units), final-norm and
+        project to logits.  ``block_fn(block_params, x, kind, block_cache)
+        -> (x, new_block_cache)`` supplies the per-block decode (dense or
+        paged)."""
         cfg = self.cfg
         x = embed_tokens(params["embedding"], token[:, None], cfg)
-        b = x.shape[0]
         new_cache = {}
         for si, (unit, reps) in enumerate(self.segs):
 
             def run(x, unit_params, unit_cache):
                 ncache = {}
                 for i, kind in enumerate(unit):
-                    x, c = B.apply_block_decode(
-                        unit_params[f"u{i}"], x, cfg, kind,
-                        unit_cache[f"u{i}"], pos=pos, impl=impl)
+                    x, c = block_fn(unit_params[f"u{i}"], x, kind,
+                                    unit_cache[f"u{i}"])
                     ncache[f"u{i}"] = c
                 return x, ncache
 
@@ -215,6 +236,24 @@ class LM:
         x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
         logits = lm_logits(params["embedding"], x, cfg)
         return logits[:, 0], new_cache
+
+    def decode_step(self, params, token, cache, pos, *, impl=None):
+        """token: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
+        def block_fn(bp, x, kind, bc):
+            return B.apply_block_decode(bp, x, self.cfg, kind, bc, pos=pos,
+                                        impl=impl)
+        return self._decode_segments(params, token, cache, block_fn)
+
+    def decode_step_paged(self, params, token, cache, page_table, pos, *,
+                          impl=None):
+        """Paged decode step.  token: (B,) int32; pos: (B,) int32
+        per-sequence positions (ragged batch); page_table: (B, n_kv)
+        int32.  Returns (logits, cache) with cache = the page pools."""
+        def block_fn(bp, x, kind, bc):
+            return B.apply_block_decode_paged(
+                bp, x, self.cfg, kind, bc, page_table=page_table, pos=pos,
+                impl=impl)
+        return self._decode_segments(params, token, cache, block_fn)
 
     # ------------------------------------------------------------------
     def loss(self, params, tokens, labels, *, impl=None):

@@ -6,18 +6,27 @@ in a scanned loop (exactly matches the training forward -- verified by the
 decode-vs-prefill consistency tests); with `chunked_prefill` the prompt is
 instead processed in chunks through the full forward using q_offset, the
 paper-faithful fast path.
+
+``generate_stream`` is the multi-tenant path: paged KV cache + continuous
+batching.  Sequences share global page pools, a host-side scheduler admits
+and retires requests every step, and tokens stream out per request as they
+are produced -- no sequence waits for the batch.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Iterable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig, ParallelConfig, ServeConfig
+from repro.core.fastattention import default_paged_impl
 from repro.core.offload import HostOffloadEngine, OffloadPlan, plan_offload
+from repro.serving.paged_cache import PagedKVCache
+from repro.serving.scheduler import ContinuousBatchScheduler, Request
 
 
 def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
@@ -31,6 +40,14 @@ def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
     return jax.random.categorical(key, lf).astype(jnp.int32)
 
 
+class StreamEvent(NamedTuple):
+    """One generated token, streamed as soon as it exists."""
+    request_id: int
+    token: int
+    index: int            # position within the request's generation
+    finished: bool        # True on the request's last token
+
+
 @dataclass
 class ServeEngine:
     model: object
@@ -38,6 +55,8 @@ class ServeEngine:
     cfg: ModelConfig
     serve: ServeConfig = ServeConfig()
     offload: Optional[HostOffloadEngine] = None
+    # jitted paged prefill/decode pairs keyed by resolved paged impl
+    _paged_fn_cache: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         self._decode = jax.jit(
@@ -85,6 +104,140 @@ class ServeEngine:
                                top_k=self.serve.top_k)
             out.append(tok)
         return jnp.stack(out, axis=1)
+
+    # ------------------------------------------------------------------
+    # paged KV + continuous batching
+    # ------------------------------------------------------------------
+    def _paged_impl(self) -> str:
+        if self.serve.paged_impl == "auto":
+            return default_paged_impl()
+        return self.serve.paged_impl
+
+    def _paged_fns(self):
+        """Jitted paged decode step + paged prefill, keyed on the resolved
+        impl so a serve-config change after first use is honoured (the
+        prefill scan additionally retraces once per distinct prompt
+        length)."""
+        impl = self._paged_impl()
+        if (impl == "paged" and jax.default_backend() == "tpu"
+                and self.serve.page_size % 128):
+            raise ValueError(
+                f"page_size={self.serve.page_size} must be a multiple of "
+                "128 (TPU lane width) for the compiled Pallas paged "
+                "kernel; pick a 128-multiple or paged_impl="
+                "'paged_reference'")
+        if impl not in self._paged_fn_cache:
+            model = self.model
+
+            def dec(params, tok, pools, table, pos):
+                return model.decode_step_paged(params, tok, pools, table,
+                                               pos, impl=impl)
+
+            def pre(params, prompt, pools, table_row):
+                s = prompt.shape[1]
+
+                def step(c, t):
+                    lg, c = model.decode_step_paged(
+                        params, prompt[:, t], c, table_row,
+                        jnp.full((1,), t, jnp.int32), impl=impl)
+                    return c, lg
+
+                pools, lgs = jax.lax.scan(step, pools, jnp.arange(s))
+                return pools, lgs[-1]
+
+            self._paged_fn_cache[impl] = (
+                jax.jit(pre, donate_argnums=(2,)),
+                jax.jit(dec, donate_argnums=(2,)))
+        return self._paged_fn_cache[impl]
+
+    def generate_stream(self, requests: Iterable[Request],
+                        key: Optional[jax.Array] = None):
+        """Continuous-batching generation over the paged KV cache.
+
+        ``requests``: scheduler.Request objects (any number -- they queue).
+        Yields StreamEvent(request_id, token, index, finished) as tokens
+        are produced.  Each step the scheduler retires finished sequences
+        (reclaiming their pages), admits waiting requests into freed
+        slots, prefills the newcomers into their own pages, then runs one
+        fused decode step for every running slot.  Idle slots write to
+        the scratch page and are ignored.
+        """
+        serve = self.serve
+        mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
+                           serve.max_batch, serve.max_pages_per_seq)
+        sched = ContinuousBatchScheduler(mgr, serve.max_batch)
+        # observability: benchmarks/tests read peak page usage + retire
+        # counts off the live objects after (or during) the stream
+        self.last_cache, self.last_scheduler = mgr, sched
+        # submit (and validate) eagerly, at the call site: the decode loop
+        # is a generator and would otherwise defer errors to first next()
+        for r in requests:
+            sched.submit(r)
+        return self._stream(mgr, sched, key)
+
+    def _stream(self, mgr: PagedKVCache, sched: ContinuousBatchScheduler,
+                key: Optional[jax.Array]):
+        serve = self.serve
+        ps = mgr.page_size
+        npages = mgr.num_pages
+        pools = self.model.init_paged_cache(npages, ps)
+        prefill, decode = self._paged_fns()
+        key = key if key is not None else jax.random.PRNGKey(serve.seed)
+        next_tok = np.zeros((serve.max_batch,), np.int32)
+
+        while sched.has_work:
+            sched.retire()
+            admitted = sched.admit()
+            if not admitted and not sched.running():
+                if not sched.waiting:
+                    break               # everything retired
+                # submit-time validation + worst-case reservation make
+                # this unreachable today; kept as a cheap tripwire for
+                # future scheduler policies (preemption relaxes both)
+                req = sched.waiting[0]
+                raise RuntimeError(
+                    f"pool too small for request {req.id}: needs "
+                    f"{-(-req.target_len // ps)} pages, pool has "
+                    f"{npages - 1}")
+
+            for slot, req in admitted:
+                mgr.append(slot, len(req.prompt))      # prompt pages
+                table_row = jnp.asarray(
+                    mgr.device_table()[slot:slot + 1])
+                pools, last_logits = prefill(
+                    self.params, jnp.asarray(req.prompt[None]), pools,
+                    table_row)
+                key, sub = jax.random.split(key)
+                tok = int(sample_token(
+                    last_logits, sub, temperature=serve.temperature,
+                    top_k=serve.top_k)[0])
+                req.generated.append(tok)
+                next_tok[slot] = tok
+                yield StreamEvent(req.id, tok, 0, req.done)
+
+            running = [(s, r) for s, r in sched.running() if not r.done]
+            if not running:
+                continue
+            # materialise the page (maybe a fresh one) every running
+            # sequence's next token will be written to, THEN snapshot the
+            # table for the device step.
+            pos_np = np.zeros((serve.max_batch,), np.int32)
+            for slot, _ in running:
+                mgr.append(slot, 1)
+                pos_np[slot] = mgr.seq_len(slot) - 1
+            logits, pools = decode(
+                self.params, jnp.asarray(next_tok), pools,
+                jnp.asarray(mgr.device_table()), jnp.asarray(pos_np))
+            key, sub = jax.random.split(key)
+            toks = np.asarray(sample_token(
+                logits, sub, temperature=serve.temperature,
+                top_k=serve.top_k))
+            for slot, req in running:
+                tok = int(toks[slot])
+                req.generated.append(tok)
+                next_tok[slot] = tok
+                yield StreamEvent(req.id, tok, len(req.generated) - 1,
+                                  req.done)
 
     def throughput_tokens_per_s(self, batch: int, prompt_len: int,
                                 n_new: int = 8) -> float:

@@ -1,0 +1,149 @@
+"""Host-side paged KV cache manager.
+
+The device side stores K/V in global page pools ``(Hkv, P, page_size, D)``
+(one pool pair per attention layer, built by ``LM.init_paged_cache``);
+this module owns the *bookkeeping*: a free list over physical pages and a
+per-slot page table mapping logical KV block ``ki`` of the sequence in
+decode slot ``b`` to its physical page.  ``page_size`` equals the decode
+kernel's ``block_kv`` so one page table entry is exactly one kernel grid
+step (the BlockSpec index map resolves ``ki -> table[b, ki]``).
+
+Page 0 is reserved as a scratch page: idle decode slots keep an all-zero
+table row and position 0, so their (ignored) writes land in scratch and
+never touch pages owned by live sequences.
+
+All state is plain numpy/int -- allocation runs on host between device
+steps, the device only ever sees the int32 table snapshot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    """Raised when an append needs a page and the free list is empty."""
+
+
+def pages_needed(cur_len: int, new_len: int, page_size: int) -> int:
+    """Pages to allocate when growing a sequence cur_len -> new_len."""
+    cur_pages = -(-cur_len // page_size)
+    new_pages = -(-new_len // page_size)
+    return max(0, new_pages - cur_pages)
+
+
+class PagedKVCache:
+    """Free-list + page-table manager for ``num_pages`` physical pages of
+    ``page_size`` tokens across ``max_slots`` decode slots."""
+
+    SCRATCH = 0          # physical page 0: idle-slot write target, never owned
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 max_pages_per_seq: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.max_pages_per_seq = max_pages_per_seq
+        # LIFO free list: recently freed pages are recycled first (their
+        # contents are most likely still resident in any cache hierarchy).
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._pages: list = [[] for _ in range(max_slots)]
+        self._lens = np.zeros((max_slots,), np.int64)
+        self._active = np.zeros((max_slots,), bool)
+        self.table = np.zeros((max_slots, max_pages_per_seq), np.int32)
+        self.peak_used_pages = 0
+
+    # -- introspection -------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def seq_len(self, slot: int) -> int:
+        return int(self._lens[slot])
+
+    def seq_lens(self) -> np.ndarray:
+        return self._lens.copy()
+
+    def is_active(self, slot: int) -> bool:
+        return bool(self._active[slot])
+
+    def owned_pages(self, slot: int) -> list:
+        return list(self._pages[slot])
+
+    def capacity(self, slot: int) -> int:
+        return len(self._pages[slot]) * self.page_size
+
+    # -- logical -> physical -------------------------------------------
+    def physical(self, slot: int, pos: int):
+        """Map a logical token position to its (page, offset)."""
+        if not self._active[slot] or pos >= self._lens[slot]:
+            raise IndexError(f"slot {slot} pos {pos} not materialised")
+        return self._pages[slot][pos // self.page_size], pos % self.page_size
+
+    def device_table(self) -> np.ndarray:
+        """int32 page-table snapshot for scalar prefetch (copy: the
+        manager keeps mutating while the device step is in flight)."""
+        return self.table.copy()
+
+    # -- alloc / append / free -----------------------------------------
+    def alloc(self, slot: int) -> None:
+        """Activate an empty slot (no pages yet -- append() materialises
+        them lazily as tokens arrive)."""
+        if self._active[slot]:
+            raise ValueError(f"slot {slot} already active")
+        self._active[slot] = True
+        self._lens[slot] = 0
+
+    def append(self, slot: int, n: int = 1) -> None:
+        """Record ``n`` new tokens for ``slot``, allocating pages as the
+        sequence crosses page boundaries."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} not active")
+        new_len = int(self._lens[slot]) + n
+        need = pages_needed(int(self._lens[slot]), new_len, self.page_size)
+        if -(-new_len // self.page_size) > self.max_pages_per_seq:
+            raise OutOfPages(
+                f"slot {slot}: {new_len} tokens exceeds "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        if need > len(self._free):
+            raise OutOfPages(
+                f"slot {slot}: need {need} pages, {len(self._free)} free")
+        for _ in range(need):
+            page = self._free.pop()
+            self.table[slot, len(self._pages[slot])] = page
+            self._pages[slot].append(page)
+        self._lens[slot] = new_len
+        self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+
+    def free(self, slot: int) -> None:
+        """Retire a slot: return its pages to the free list and reset its
+        table row to scratch."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} not active")
+        self._free.extend(reversed(self._pages[slot]))
+        self._pages[slot] = []
+        self.table[slot, :] = self.SCRATCH
+        self._lens[slot] = 0
+        self._active[slot] = False
+
+    # -- invariants (exercised by the property tests) -------------------
+    def check_invariants(self) -> None:
+        owned = [p for pages in self._pages for p in pages]
+        assert self.SCRATCH not in owned, "scratch page was allocated"
+        assert len(owned) == len(set(owned)), "page double-owned"
+        assert not (set(owned) & set(self._free)), "page owned AND free"
+        assert len(owned) + len(self._free) == self.num_pages - 1, \
+            "page leaked"
+        for slot in range(self.max_slots):
+            have = len(self._pages[slot])
+            assert have * self.page_size >= self._lens[slot], \
+                f"slot {slot} under-allocated"
+            assert (have - 1) * self.page_size < max(self._lens[slot], 1), \
+                f"slot {slot} over-allocated"
+            assert list(self.table[slot, :have]) == self._pages[slot], \
+                f"slot {slot} table/page-list mismatch"

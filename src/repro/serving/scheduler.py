@@ -1,0 +1,139 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+FlashInfer/vLLM-style iteration-level scheduling: a fixed grid of decode
+slots (``max_batch``) is refilled from a FIFO waiting queue every step --
+sequences retire individually the moment they finish, their pages go back
+to the free list, and the freed slot admits the next waiting request.
+The whole batch never waits for its slowest member.
+
+Admission is *worst-case reserved*: a request is admitted only if the pool
+can still hold its full prompt + max_new_tokens after honouring the
+worst-case growth of everything already running.  Pages themselves are
+allocated lazily (``PagedKVCache.append``), so short-finishing sequences
+return their slack early -- the reservation only gates admission, it never
+pins physical pages.  This makes the engine deadlock-free without
+preemption; preemption/swap is the ROADMAP follow-up that relaxes it.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.paged_cache import PagedKVCache, pages_needed
+
+WAITING, RUNNING, FINISHED = "WAITING", "RUNNING", "FINISHED"
+
+
+@dataclass
+class Request:
+    """One generation request flowing through the engine."""
+    id: int
+    prompt: np.ndarray                 # (S,) int32 token ids
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    state: str = WAITING
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if len(self.prompt) == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens} "
+                "(prefill always emits one token)")
+
+    @property
+    def target_len(self) -> int:
+        """Worst-case cache length: prompt + every new token's KV."""
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def done(self) -> bool:
+        return (len(self.generated) >= self.max_new_tokens
+                or (self.eos_id is not None and len(self.generated) > 0
+                    and self.generated[-1] == self.eos_id))
+
+
+class ContinuousBatchScheduler:
+    """Admits waiting requests into free decode slots, retires finished
+    sequences, and reclaims their pages."""
+
+    def __init__(self, cache: PagedKVCache, max_slots: Optional[int] = None):
+        self.cache = cache
+        self.max_slots = max_slots or cache.max_slots
+        assert self.max_slots <= cache.max_slots
+        self.waiting: deque = deque()
+        self.slots: List[Optional[Request]] = [None] * self.max_slots
+        self.finished: List[Request] = []
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.state != WAITING:
+            raise ValueError(f"request {req.id} already {req.state}")
+        worst = pages_needed(0, req.target_len, self.cache.page_size)
+        if worst > self.cache.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.id}: target_len {req.target_len} exceeds "
+                f"max_seq_len "
+                f"{self.cache.max_pages_per_seq * self.cache.page_size}")
+        if worst > self.cache.num_pages - 1:
+            raise ValueError(
+                f"request {req.id}: needs {worst} pages, pool has "
+                f"{self.cache.num_pages - 1}")
+        self.waiting.append(req)
+
+    # -- step phases -----------------------------------------------------
+    def _reserved_pages(self) -> int:
+        """Worst-case future page demand of everything running."""
+        return sum(
+            pages_needed(self.cache.seq_len(req.slot), req.target_len,
+                         self.cache.page_size)
+            for req in self.slots if req is not None)
+
+    def retire(self) -> List[Request]:
+        """Retire finished sequences: free their pages and slots."""
+        retired = []
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.done:
+                self.cache.free(slot)
+                req.state = FINISHED
+                req.slot = None
+                self.slots[slot] = None
+                self.finished.append(req)
+                retired.append(req)
+        return retired
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Fill free slots from the waiting queue (FIFO, no skipping: a
+        large head-of-line request blocks rather than starves)."""
+        admitted = []
+        reserved = self._reserved_pages()
+        for slot in range(self.max_slots):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            worst = pages_needed(0, req.target_len, self.cache.page_size)
+            if worst > self.cache.free_pages - reserved:
+                break
+            self.waiting.popleft()
+            self.cache.alloc(slot)
+            req.state = RUNNING
+            req.slot = slot
+            self.slots[slot] = req
+            reserved += worst
+            admitted.append((slot, req))
+        return admitted
+
+    # -- introspection ----------------------------------------------------
+    def running(self) -> List[Tuple[int, Request]]:
+        return [(s, r) for s, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(
+            r is not None for r in self.slots)

@@ -28,6 +28,8 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.core.compat import shard_map
 """
 
 
@@ -37,8 +39,7 @@ import functools
 from repro.core.tiled_allreduce import (tiled_matmul_allreduce,
     single_matmul_allreduce, ring_matmul_allreduce,
     tiled_matmul_reducescatter)
-mesh = jax.make_mesh((2,4), ('data','model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2,4), ('data','model'))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
 w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
@@ -47,13 +48,13 @@ errs = {}
 for name, fn in [('single', single_matmul_allreduce),
                  ('tiled', tiled_matmul_allreduce),
                  ('ring', ring_matmul_allreduce)]:
-    f = jax.shard_map(functools.partial(fn, axis_name='model'), mesh=mesh,
+    f = shard_map(functools.partial(fn, axis_name='model'), mesh=mesh,
         in_specs=(P(None,'model'), P('model',None)),
         out_specs=P(None,None), check_vma=False)
     errs[name] = float(jnp.max(jnp.abs(jax.jit(f)(x, w) - ref)))
 # reduce-scatter variant: rows come back chunk-block-scattered, so
 # compare with n_chunks=1 where the global ordering is the identity
-f = jax.shard_map(functools.partial(tiled_matmul_reducescatter,
+f = shard_map(functools.partial(tiled_matmul_reducescatter,
     axis_name='model', n_chunks=1), mesh=mesh,
     in_specs=(P(None,'model'), P('model',None)),
     out_specs=P('model',None), check_vma=False)
@@ -71,13 +72,12 @@ import functools
 from repro.core.tiled_allreduce import (ring_matmul_allreduce,
                                         single_matmul_allreduce)
 from repro.analysis.hlo import analyze_hlo_text
-mesh = jax.make_mesh((8,), ('model',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('model',))
 sds = jax.ShapeDtypeStruct
 counts = {}
 for name, fn, kw in [('single', single_matmul_allreduce, {}),
                      ('ring', ring_matmul_allreduce, dict(n_chunks=4))]:
-    f = jax.shard_map(functools.partial(fn, axis_name='model', **kw),
+    f = shard_map(functools.partial(fn, axis_name='model', **kw),
         mesh=mesh, in_specs=(P(None,'model'), P('model',None)),
         out_specs=P(None,None), check_vma=False)
     c = jax.jit(f).lower(sds((128, 64), jnp.float32),
@@ -99,8 +99,7 @@ def test_context_parallel_decode_matches_oracle():
     r = run_child(CHILD_PRELUDE + """
 from repro.core.distributed_decode import context_parallel_decode
 from repro.kernels.fastattn.ref import decode_reference
-mesh = jax.make_mesh((2,4), ('data','model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2,4), ('data','model'))
 rng = np.random.default_rng(0)
 B,Hq,Hkv,S,D = 4, 8, 2, 256, 32
 q = jnp.asarray(rng.normal(size=(B,Hq,1,D)), jnp.float32)
@@ -128,8 +127,7 @@ from repro.config import get_model_config, reduce_for_smoke, ParallelConfig
 from repro.models import build_model
 from repro.sharding.rules import axis_rules, param_sharding_tree
 cfg = reduce_for_smoke(get_model_config('qwen2.5-32b'))
-mesh = jax.make_mesh((2,4), ('data','model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2,4), ('data','model'))
 model = build_model(cfg, ParallelConfig(data=2, model=4, remat='none'))
 toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
                           cfg.vocab_size)
@@ -152,8 +150,7 @@ def test_compressed_psum_error_feedback():
     quantization error so the running average converges."""
     r = run_child(CHILD_PRELUDE + """
 from repro.training.compression import compressed_psum
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('data',))
 rng = np.random.default_rng(0)
 g_all = jnp.asarray(rng.normal(size=(8, 64, 32)), jnp.float32)
 true_mean = jnp.mean(g_all, axis=0)
@@ -164,7 +161,7 @@ def body(g):
     red, res = compressed_psum(g, res, 'data')
     return red[None], res[None]
 
-f = jax.jit(jax.shard_map(body, mesh=mesh,
+f = jax.jit(shard_map(body, mesh=mesh,
     in_specs=P('data', None, None),
     out_specs=(P(None, None, None), P('data', None, None)),
     check_vma=False))

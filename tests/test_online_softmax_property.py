@@ -1,8 +1,9 @@
 """Hypothesis property tests on the system's core numerical invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+import pytest
+
+from _hypothesis_compat import given, hnp, settings, st
 
 from repro.kernels.fastattn.ref import flash_reference, standard_attention
 

@@ -1,0 +1,135 @@
+"""Property-style tests for the paged KV cache manager.
+
+Random admit/append/retire traces (seeded numpy rng, no hypothesis
+dependency) must preserve the pool invariants after every operation: no
+page leaked, none double-owned, none both owned and free, the scratch
+page never allocated, and the logical->physical mapping consistent with
+the device page table.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.paged_cache import OutOfPages, PagedKVCache, pages_needed
+
+
+def test_pages_needed():
+    assert pages_needed(0, 0, 16) == 0
+    assert pages_needed(0, 1, 16) == 1
+    assert pages_needed(0, 16, 16) == 1
+    assert pages_needed(0, 17, 16) == 2
+    assert pages_needed(16, 17, 16) == 1
+    assert pages_needed(15, 16, 16) == 0
+    assert pages_needed(5, 3, 16) == 0          # shrink never frees
+
+
+def test_alloc_append_free_roundtrip():
+    c = PagedKVCache(num_pages=8, page_size=4, max_slots=2,
+                     max_pages_per_seq=4)
+    assert c.free_pages == 7                    # page 0 is scratch
+    c.alloc(0)
+    c.append(0, 10)                             # 3 pages
+    assert c.used_pages == 3 and c.seq_len(0) == 10
+    c.check_invariants()
+    page, off = c.physical(0, 9)
+    assert page == c.table[0, 2] and off == 1
+    with pytest.raises(IndexError):
+        c.physical(0, 10)                       # not materialised yet
+    c.free(0)
+    assert c.free_pages == 7 and c.seq_len(0) == 0
+    assert (c.table[0] == 0).all()
+    c.check_invariants()
+
+
+def test_double_alloc_and_inactive_ops_raise():
+    c = PagedKVCache(num_pages=4, page_size=4, max_slots=2,
+                     max_pages_per_seq=2)
+    c.alloc(0)
+    with pytest.raises(ValueError):
+        c.alloc(0)
+    with pytest.raises(ValueError):
+        c.append(1)
+    with pytest.raises(ValueError):
+        c.free(1)
+
+
+def test_out_of_pages_and_per_seq_cap():
+    c = PagedKVCache(num_pages=4, page_size=2, max_slots=2,
+                     max_pages_per_seq=8)
+    c.alloc(0)
+    c.append(0, 6)                              # all 3 usable pages
+    c.alloc(1)
+    with pytest.raises(OutOfPages):
+        c.append(1, 1)
+    c.check_invariants()                        # failed append is a no-op
+    assert c.seq_len(1) == 0
+    c.free(0)
+    c.append(1, 2)                              # freed pages reusable
+    c.check_invariants()
+
+    c2 = PagedKVCache(num_pages=64, page_size=2, max_slots=1,
+                      max_pages_per_seq=2)
+    c2.alloc(0)
+    with pytest.raises(OutOfPages):
+        c2.append(0, 5)                         # > max_pages_per_seq
+
+
+def test_mapping_roundtrip_random_lengths():
+    rng = np.random.default_rng(0)
+    c = PagedKVCache(num_pages=40, page_size=8, max_slots=4,
+                     max_pages_per_seq=8)
+    lens = [1, 8, 9, 40]
+    for slot, n in enumerate(lens):
+        c.alloc(slot)
+        c.append(slot, n)
+    table = c.device_table()
+    for slot, n in enumerate(lens):
+        owned = c.owned_pages(slot)
+        for pos in rng.integers(0, n, size=20):
+            page, off = c.physical(slot, int(pos))
+            # physical() agrees with the device table the kernel reads
+            assert page == table[slot, pos // 8]
+            assert off == pos % 8
+            assert page == owned[pos // 8]
+    c.check_invariants()
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_trace_no_leak_no_double_own(seed):
+    """Random admit/append/retire traffic: invariants hold at every step
+    and a fully drained pool returns to its initial state."""
+    rng = np.random.default_rng(seed)
+    c = PagedKVCache(num_pages=24, page_size=4, max_slots=6,
+                     max_pages_per_seq=6)
+    for _ in range(300):
+        op = rng.choice(["alloc", "append", "free"])
+        slot = int(rng.integers(0, c.max_slots))
+        try:
+            if op == "alloc":
+                c.alloc(slot)
+            elif op == "append":
+                c.append(slot, int(rng.integers(1, 6)))
+            else:
+                c.free(slot)
+        except (ValueError, OutOfPages):
+            pass                                # rejected ops are no-ops
+        c.check_invariants()
+    for slot in range(c.max_slots):
+        if c.is_active(slot):
+            c.free(slot)
+    c.check_invariants()
+    assert c.used_pages == 0 and c.free_pages == 23
+    assert (c.device_table() == 0).all()
+    assert c.peak_used_pages <= 23
+
+
+def test_lifo_page_reuse():
+    """Freshly freed pages are handed out first (LIFO free list)."""
+    c = PagedKVCache(num_pages=16, page_size=4, max_slots=2,
+                     max_pages_per_seq=4)
+    c.alloc(0)
+    c.append(0, 8)
+    pages = c.owned_pages(0)
+    c.free(0)
+    c.alloc(1)
+    c.append(1, 8)
+    assert c.owned_pages(1) == pages

@@ -12,9 +12,9 @@ def test_gpipe_matches_sequential():
 import json
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
 from repro.training.pipeline import make_pipeline, bubble_fraction
-mesh = jax.make_mesh((4,), ('stage',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ('stage',))
 rng = np.random.default_rng(0)
 n_stages, n_micro, mb, d = 4, 8, 2, 16
 # one linear+tanh layer per stage

@@ -2,7 +2,9 @@
 must reconstruct ANY causal / banded B-mask exactly (paper Fig. 3)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import tiling_mask as tm
 
