@@ -1,24 +1,29 @@
-"""Mixed-length-traffic serving benchmark: paged KV + continuous batching.
+"""Serving benchmark: paged KV + continuous batching + chunked prefill.
 
-Streams a queue of requests with randomised prompt/generation lengths
-through ``ServeEngine.generate_stream`` and reports:
+Two sections, emitted together as machine-readable ``BENCH_serving.json``
+at the repo root (the perf baseline future PRs regress against):
 
-  * decode throughput (tokens/s) and per-token latency,
-  * slot occupancy (how full the decode batch stayed -- the quantity
-    continuous batching exists to maximise),
-  * page-pool pressure: peak pages in use vs the configured pool, proving
-    admission control keeps KV memory bounded while slots/pages recycle.
-
-The pool is deliberately sized *below* ``max_batch * max_seq_len`` (the
-dense cache's footprint): the scheduler trades a longer queue for a hard
-memory ceiling, which a dense static-batch engine cannot do at all.
+* **mixed traffic** -- streams a queue of requests with randomised
+  prompt/generation lengths through ``ServeEngine.generate_stream`` and
+  reports decode throughput, per-request time-to-first-token (TTFT)
+  and page-pool pressure.  The pool is deliberately sized
+  *below* ``max_batch * max_seq_len``: the scheduler trades a longer
+  queue for a hard memory ceiling a dense static-batch engine cannot
+  offer at all.
+* **prefill** -- one long prompt through the legacy scan prefill (one
+  decode step per token, PR 1) vs chunked paged prefill (fixed-size
+  chunks through the full tiled forward), reporting prefill tokens/s and
+  the chunked/scan speedup.
 
     PYTHONPATH=src python -m benchmarks.serving_bench \
-        [--arch gemma2-2b] [--requests 12] [--max-batch 4]
+        [--arch gemma2-2b] [--requests 12] [--prefill-len 512]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -30,20 +35,45 @@ from repro.models import build_model
 from repro.serving.engine import ServeEngine
 from repro.serving.scheduler import Request
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _small_config(cfg):
+    """A 'small' (not unit-test-tiny) CPU config for the prefill timing:
+    reduce_for_smoke is sized for test latency, and at that width the
+    per-step overhead of the scan baseline masks the batching win the
+    chunked path exists for.  Keeps GQA ratio / window / softcap."""
+    cfg = reduce_for_smoke(cfg)
+    kv = cfg.num_kv_heads
+    heads = cfg.num_heads
+    head_dim = 32
+    return dataclasses.replace(
+        cfg, num_layers=4, d_model=heads * head_dim, head_dim=head_dim,
+        d_ff=4 * heads * head_dim if cfg.d_ff else 0, vocab_size=1024,
+        window_size=128 if cfg.window_size else None)
+
+
+def _build(arch: str, smoke: bool, small: bool = False):
+    cfg = get_model_config(arch)
+    if small and smoke:
+        cfg = _small_config(cfg)
+    elif smoke:
+        cfg = reduce_for_smoke(cfg)
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
 
 def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
         page_size: int = 0, max_seq_len: int = 128, pool_frac: float = 0.6,
-        seed: int = 0, smoke: bool = True) -> dict:
+        seed: int = 0, smoke: bool = True, built=None) -> dict:
+    """Mixed-length-traffic section."""
     # 0 = auto: the TPU kernel needs lane-width (128) pages; CPU smoke
     # runs use small pages so slot/page churn actually happens
     page_size = page_size or (
         128 if jax.default_backend() == "tpu" else 16)
     max_seq_len = max(max_seq_len, 2 * page_size)
-    cfg = get_model_config(arch)
-    if smoke:
-        cfg = reduce_for_smoke(cfg)
-    model = build_model(cfg, ParallelConfig(remat="none"))
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = built or _build(arch, smoke)
 
     dense_pages = max_batch * (-(-max_seq_len // page_size))
     num_pages = max(4, int(dense_pages * pool_frac)) + 1
@@ -65,17 +95,20 @@ def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
         reqs.append(Request(id=i, prompt=rng.integers(
             0, cfg.vocab_size, size=s), max_new_tokens=n))
 
-    # warmup: the jitted prefill retraces per distinct prompt length, so
-    # trace one request of every length in the workload (plus the shared
-    # decode step) -- otherwise the timed region is compile-dominated
-    warm_lens = sorted({len(r.prompt) for r in reqs})
+    # warmup: chunked prefill + fused decode trace once; run a couple of
+    # short requests through so the timed region is not compile-dominated
     warms = [Request(id=-1 - i, prompt=rng.integers(
                  0, cfg.vocab_size, size=s), max_new_tokens=2)
-             for i, s in enumerate(warm_lens)]
+             for i, s in enumerate((3, serve.prefill_chunk_tokens + 1))]
     list(engine.generate_stream(warms))
 
     t0 = time.perf_counter()
-    events = list(engine.generate_stream(reqs))
+    ttft = {}
+    events = []
+    for ev in engine.generate_stream(reqs):
+        if ev.index == 0:
+            ttft[ev.request_id] = time.perf_counter() - t0
+        events.append(ev)
     dt = time.perf_counter() - t0
 
     mgr, sched = engine.last_cache, engine.last_scheduler
@@ -85,12 +118,17 @@ def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
     assert mgr.used_pages == 0, "pages leaked after drain"
     assert mgr.peak_used_pages <= num_pages - 1, "pool ceiling violated"
 
+    tt = np.asarray(sorted(ttft.values()))
     stats = {
         "requests": n_requests,
         "generated_tokens": total_new,
         "prompt_tokens": int(sum(len(r.prompt) for r in reqs)),
         "wall_s": round(dt, 3),
         "tokens_per_s": round(total_new / dt, 1),
+        # TTFT includes queueing: requests that wait for a slot pay it
+        "ttft_mean_s": round(float(tt.mean()), 4),
+        "ttft_p50_s": round(float(np.median(tt)), 4),
+        "ttft_max_s": round(float(tt.max()), 4),
         "pool_pages": num_pages - 1,
         "dense_equiv_pages": dense_pages,
         "peak_pages": mgr.peak_used_pages,
@@ -99,6 +137,46 @@ def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
         "finished": len(sched.finished),
     }
     return stats
+
+
+def prefill_bench(arch: str = "gemma2-2b", prompt_len: int = 512,
+                  page_size: int = 0, prefill_chunk: int = 0,
+                  seed: int = 0, smoke: bool = True, built=None) -> dict:
+    """Chunked vs scan prefill throughput (and TTFT) on one long prompt."""
+    page_size = page_size or (
+        128 if jax.default_backend() == "tpu" else 16)
+    cfg, model, params = built or _build(arch, smoke, small=True)
+    max_seq_len = prompt_len + 2 * page_size
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, size=prompt_len)
+
+    out = {"prompt_tokens": prompt_len, "d_model": cfg.d_model,
+           "num_layers": cfg.num_layers}
+    for mode in ("scan", "chunked"):
+        serve = ServeConfig(max_batch=1, max_seq_len=max_seq_len, top_k=1,
+                            page_size=page_size, prefill_mode=mode,
+                            prefill_chunk=prefill_chunk)
+        engine = ServeEngine(model=model, params=params, cfg=cfg,
+                             serve=serve)
+        times = []
+        for rep in range(2):       # rep 0 is the compile warmup
+            req = Request(id=rep, prompt=prompt, max_new_tokens=1)
+            t0 = time.perf_counter()
+            list(engine.generate_stream([req]))
+            times.append(time.perf_counter() - t0)
+        best = min(times[1:])
+        # one request, one new token: the whole wall time is TTFT
+        out[mode] = {
+            "ttft_s": round(best, 4),
+            "tokens_per_s": round(prompt_len / best, 1),
+        }
+        if mode == "chunked":
+            out["prefill_chunk"] = serve.prefill_chunk_tokens
+            out["kernel_launches"] = -(-prompt_len
+                                       // serve.prefill_chunk_tokens)
+    out["chunked_speedup_vs_scan"] = round(
+        out["scan"]["ttft_s"] / out["chunked"]["ttft_s"], 2)
+    return out
 
 
 def main():
@@ -111,16 +189,52 @@ def main():
     ap.add_argument("--max-seq-len", type=int, default=128)
     ap.add_argument("--pool-frac", type=float, default=0.6,
                     help="pool size as a fraction of the dense cache")
+    ap.add_argument("--prefill-len", type=int, default=512,
+                    help="prompt length for the prefill section")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk size (0 = auto: 4 pages)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-smoke) model config")
+    ap.add_argument("--skip-prefill", action="store_true",
+                    help="mixed-traffic section only")
+    ap.add_argument("--json-out", default=os.path.join(
+        REPO_ROOT, "BENCH_serving.json"))
     args = ap.parse_args()
-    stats = run(arch=args.arch, n_requests=args.requests,
-                max_batch=args.max_batch, page_size=args.page_size,
-                max_seq_len=args.max_seq_len, pool_frac=args.pool_frac,
-                seed=args.seed, smoke=not args.full)
-    for k, v in stats.items():
-        print(f"{k},{v}", flush=True)
+
+    report = {
+        "meta": {
+            "arch": args.arch,
+            "smoke": not args.full,
+            "backend": jax.default_backend(),
+            "paged_impl": ("paged" if jax.default_backend() == "tpu"
+                           else "paged_reference"),
+        },
+        # tiny unit-test config: exercises slot/page churn
+        "mixed_traffic": run(
+            arch=args.arch, n_requests=args.requests,
+            max_batch=args.max_batch, page_size=args.page_size,
+            max_seq_len=args.max_seq_len, pool_frac=args.pool_frac,
+            seed=args.seed, smoke=not args.full),
+    }
+    if not args.skip_prefill:
+        # 'small' config: wide enough that prefill batching shows
+        report["prefill"] = prefill_bench(
+            arch=args.arch, prompt_len=args.prefill_len,
+            page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+            seed=args.seed, smoke=not args.full)
+
+    def flat(prefix, d):
+        for k, v in d.items():
+            if isinstance(v, dict):
+                flat(f"{prefix}{k}.", v)
+            else:
+                print(f"{prefix}{k},{v}", flush=True)
+    flat("", report)
+    with open(args.json_out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.json_out}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
-"""Continuous-batching serving: paged KV cache, multi-tenant decode.
+"""Continuous-batching serving: paged KV cache, multi-tenant decode,
+chunked prefill.
 
-Five requests with different prompt and generation lengths share three
+Six requests with different prompt and generation lengths share three
 decode slots and one page pool.  Tokens stream out per request the moment
 they exist; finished sequences retire individually and their pages are
 recycled into the next admission -- no sequence ever waits for the batch.
+The last request carries a long prompt: it prefills in fixed 16-token
+chunks under a per-step token budget, so watch the other sequences keep
+streaming tokens while it works through its prompt (Sarathi-style
+prefill/decode interleaving).
 
     PYTHONPATH=src python examples/continuous_batching.py
 """
@@ -21,22 +26,26 @@ cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
 model = build_model(cfg, ParallelConfig(remat="none"))
 params = model.init(jax.random.PRNGKey(0))
 
-# --- serving config: 3 slots, 16-token pages, pool of 12 usable pages ------
-# (= 192 cache tokens -- *less* than 3 slots x 64 max_seq_len = a dense
-# cache could not even be allocated this small)
-serve = ServeConfig(max_batch=3, max_seq_len=64, top_k=1,
-                    page_size=16, num_pages=13)
+# --- serving config: 3 slots, 16-token pages, pool of 16 usable pages ------
+# (= 256 cache tokens -- *less* than 3 slots x 96 max_seq_len = a dense
+# cache could not even be allocated this small).  Prefill runs in
+# 16-token chunks, at most one chunk per engine step.
+serve = ServeConfig(max_batch=3, max_seq_len=96, top_k=1,
+                    page_size=16, num_pages=17,
+                    prefill_chunk=16, prefill_token_budget=16)
 engine = ServeEngine(model=model, params=params, cfg=cfg, serve=serve)
 
-# --- mixed-length traffic ---------------------------------------------------
+# --- mixed-length traffic (last request: a long prompt) ---------------------
 rng = np.random.default_rng(0)
-spec = [(5, 6), (9, 3), (3, 10), (7, 4), (12, 5)]   # (prompt, new) tokens
+spec = [(5, 6), (9, 3), (3, 10), (7, 4), (12, 5), (60, 4)]
 requests = [Request(id=i, prompt=rng.integers(0, cfg.vocab_size, size=s),
                     max_new_tokens=n)
             for i, (s, n) in enumerate(spec)]
 
 print(f"pool: {serve.num_pages - 1} usable pages x {serve.page_size} tok, "
-      f"{serve.max_batch} decode slots, {len(requests)} requests queued")
+      f"{serve.max_batch} decode slots, {len(requests)} requests queued; "
+      f"req 5 prefills {spec[-1][0]} tokens in "
+      f"{serve.prefill_chunk_tokens}-token chunks")
 for ev in engine.generate_stream(requests):
     mark = " <- finished" if ev.finished else ""
     print(f"req {ev.request_id}  token[{ev.index}] = {ev.token}{mark}")

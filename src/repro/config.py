@@ -245,9 +245,33 @@ class ServeConfig:
     # (auto = Pallas kernel on TPU, jittable gather-reference elsewhere).
     paged_impl: str = "auto"
 
+    # --- chunked prefill (Sarathi-style prefill/decode interleaving) ---
+    # Prompt tokens per prefill kernel launch (the tiled-forward chunk).
+    # 0 = auto: 4 pages.  Jit traces are keyed by this, never by prompt
+    # length.
+    prefill_chunk: int = 0
+    # Prefill tokens per engine step before the fused decode step for
+    # all running slots; 0 = auto (one chunk).  A soft cap, rounded up
+    # to whole chunks (worst case budget + prefill_chunk - 1 tokens).
+    # Smaller = lower decode latency under long-prompt arrival, larger
+    # = faster TTFT.
+    prefill_token_budget: int = 0
+    # "chunked" = tiled full-forward prefill (the fast path); "scan" =
+    # legacy token-at-a-time teacher forcing, kept as the equivalence
+    # oracle.
+    prefill_mode: str = "chunked"
+
     @property
     def max_pages_per_seq(self) -> int:
         return -(-self.max_seq_len // self.page_size)
+
+    @property
+    def prefill_chunk_tokens(self) -> int:
+        return self.prefill_chunk or 4 * self.page_size
+
+    @property
+    def prefill_budget_tokens(self) -> int:
+        return max(self.prefill_token_budget or self.prefill_chunk_tokens, 1)
 
     def pool_pages(self) -> int:
         if self.num_pages:
@@ -257,11 +281,14 @@ class ServeConfig:
 
 @dataclass(frozen=True)
 class RunConfig:
+    # default_factory everywhere: class-level default *instances* would be
+    # shared across every RunConfig (harmless only while the configs stay
+    # frozen -- don't rely on it).
     model: ModelConfig
-    parallel: ParallelConfig = ParallelConfig()
-    shape: ShapeConfig = SHAPES["train_4k"]
-    train: TrainConfig = TrainConfig()
-    serve: ServeConfig = ServeConfig()
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    shape: ShapeConfig = field(default_factory=lambda: SHAPES["train_4k"])
+    train: TrainConfig = field(default_factory=TrainConfig)
+    serve: ServeConfig = field(default_factory=ServeConfig)
 
 
 # ---------------------------------------------------------------------------

@@ -18,17 +18,21 @@ def fast_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    softcap: Optional[float] = None,
                    scale: Optional[float] = None,
                    q_offset: int = 0,
+                   kv_valid: Optional[int] = None,
                    impl: str = "reference",
                    block_q: int = 256,
                    block_kv1: int = 1024,
                    block_kv2: int = 256) -> jax.Array:
-    """Attention over (B, S, H, D) tensors.  Returns (B, Sq, Hq, D)."""
+    """Attention over (B, S, H, D) tensors.  Returns (B, Sq, Hq, D).
+
+    ``kv_valid`` (static) masks K/V rows past that length (e.g. the
+    zero-padded tail of a gathered paged view)."""
     from repro.kernels.fastattn.ops import fastattn
     qT = q.transpose(0, 2, 1, 3)
     kT = k.transpose(0, 2, 1, 3)
     vT = v.transpose(0, 2, 1, 3)
     out = fastattn(qT, kT, vT, causal, window, softcap, scale, q_offset,
-                   block_q, block_kv1, block_kv2, impl)
+                   block_q, block_kv1, block_kv2, impl, kv_valid)
     return out.transpose(0, 2, 1, 3)
 
 
@@ -37,6 +41,44 @@ def default_paged_impl() -> str:
     on TPU, the jittable gather-reference everywhere else (the kernel
     still runs off-TPU via interpret=True, but only for verification)."""
     return "paged" if jax.default_backend() == "tpu" else "paged_reference"
+
+
+def fast_attention_prefill_paged(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array, page_table: jax.Array,
+                                 pos_start: jax.Array, kv_len: jax.Array, *,
+                                 window: Optional[int] = None,
+                                 softcap: Optional[float] = None,
+                                 scale: Optional[float] = None,
+                                 impl: str = "paged_reference",
+                                 block_q: int = 256) -> jax.Array:
+    """Chunked-prefill attention of one prompt chunk against the paged
+    KV pools (the chunk's own K/V rows must already be scattered in).
+
+    q: (B, Sq, Hq, D) layer-layout chunk queries; pages
+    (Hkv, P, page_size, D); page_table (B, n_kv) int32; pos_start /
+    kv_len: (B,) int32 *runtime* offsets -- one jit trace serves every
+    chunk position of every prompt length.  "paged" runs the Pallas
+    kernel (scalar-prefetched page table, auto-interpret off TPU);
+    "paged_reference" gathers the owned pages and runs the online-softmax
+    flash reference -- the jittable CPU path.  Returns (B, Sq, Hq, D).
+    """
+    qT = q.transpose(0, 2, 1, 3)
+    if impl == "paged_reference":
+        from repro.kernels.flash_decode.ref import paged_prefill_reference
+        out = paged_prefill_reference(
+            qT, k_pages, v_pages, page_table, pos_start, kv_len,
+            window=window, softcap=softcap, scale=scale)
+    elif impl in ("paged", "paged_interpret"):
+        from repro.kernels.fastattn.ops import fastattn_paged_prefill
+        interpret = (impl == "paged_interpret"
+                     or jax.default_backend() != "tpu")
+        out = fastattn_paged_prefill(
+            qT, k_pages, v_pages, page_table, pos_start, kv_len,
+            window=window, softcap=softcap, scale=scale, block_q=block_q,
+            interpret=interpret)
+    else:
+        raise ValueError(f"unknown paged prefill impl {impl!r}")
+    return out.transpose(0, 2, 1, 3)
 
 
 def fast_attention_decode(q: jax.Array, k_cache: jax.Array,

@@ -1,1 +1,2 @@
-from repro.kernels.fastattn.ops import fastattn  # noqa: F401
+from repro.kernels.fastattn.ops import (fastattn,  # noqa: F401
+                                        fastattn_paged_prefill)

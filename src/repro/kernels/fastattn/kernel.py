@@ -151,13 +151,15 @@ def _kernel(q_ref, k_ref, v_ref, mmask_ref, o_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "softcap", "scale", "q_offset",
-                     "block_q", "block_kv1", "block_kv2", "interpret"))
+                     "kv_valid", "block_q", "block_kv1", "block_kv2",
+                     "interpret"))
 def fastattn_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  causal: bool = True,
                  window: Optional[int] = None,
                  softcap: Optional[float] = None,
                  scale: Optional[float] = None,
                  q_offset: int = 0,
+                 kv_valid: Optional[int] = None,
                  block_q: int = 256,
                  block_kv1: int = 1024,
                  block_kv2: int = 256,
@@ -167,12 +169,16 @@ def fastattn_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D), Hq % Hkv == 0.
     Sequence lengths need not be multiples of the block sizes (padded
     internally; padding masked through the M-mask row trick).
+    ``kv_valid`` marks only the first rows of K/V as real (a gathered
+    paged view whose last page is partially filled); the tail is masked
+    exactly like internal padding.
     """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     assert hq % hkv == 0, (hq, hkv)
     n_rep = hq // hkv
     scale = scale if scale is not None else d ** -0.5
+    kv_valid = skv if kv_valid is None else min(kv_valid, skv)
 
     block_q = min(block_q, max(sq, 8))
     block_kv2 = min(block_kv2, block_kv1)
@@ -199,7 +205,7 @@ def fastattn_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         # Grid-level skip: clamp pruned blocks onto the nearest valid one so
         # the pipeline does not re-DMA them (consecutive identical indices
         # reuse the resident VMEM buffer).
-        last = n_kv1 - 1
+        last = jnp.minimum(n_kv1 - 1, (kv_valid - 1) // block_kv1)
         if causal:
             q_end = q_offset + (qi + 1) * block_q - 1
             last = jnp.minimum(last, q_end // block_kv1)
@@ -212,7 +218,7 @@ def fastattn_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(
         _kernel, causal=causal, window=window, softcap=softcap, scale=scale,
-        q_offset=q_offset, kv_valid=skv, block_q=block_q,
+        q_offset=q_offset, kv_valid=kv_valid, block_q=block_q,
         block_kv1=block_kv1, block_kv2=block_kv2, n_kv1=n_kv1, mm=mm)
 
     out = pl.pallas_call(
@@ -237,4 +243,162 @@ def fastattn_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ),
         interpret=interpret,
     )(q, k, v, mmask)
+    return out[:, :, :sq, :]
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked prefill: a block of prompt tokens against the KV page pools
+# ---------------------------------------------------------------------------
+
+def _paged_prefill_kernel(pt_ref, start_ref, len_ref, q_ref, k_ref, v_ref,
+                          o_ref, acc_ref, m_ref, l_ref, *,
+                          window: Optional[int], softcap: Optional[float],
+                          scale: float, block_q: int, page_size: int,
+                          n_kv: int):
+    bi = pl.program_id(0)
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    q_start = start_ref[bi] + qi * block_q     # global position of q row 0
+    kv_len = len_ref[bi]
+
+    # ---- level-1 page validity (grid-level skip, dynamic offsets) ---------
+    last_valid = jnp.minimum((q_start + block_q - 1) // page_size,
+                             jnp.maximum(kv_len - 1, 0) // page_size)
+    first_valid = 0
+    if window is not None:
+        first_valid = jnp.maximum(0, (q_start - window + 1) // page_size)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when((ki >= first_valid) & (ki <= last_valid))
+    def _compute():
+        q = q_ref[0, 0]                        # (block_q, d)
+        k = k_ref[0, 0]                        # (page_size, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        # Chunk offsets are per-sequence runtime values, so the mask is
+        # arithmetic (iota) rather than the static M-mask slice trick.
+        rows = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 0)
+        cols = ki * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, page_size), 1)
+        mask = (rows >= cols) & (cols < kv_len)
+        if window is not None:
+            mask = mask & (rows - cols < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (block_q, LANES)
+        m_cur = jnp.broadcast_to(jnp.max(s, axis=1, keepdims=True),
+                                 m_prev.shape)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, :1])
+        l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+            jnp.sum(p, axis=1, keepdims=True), m_prev.shape)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, :1] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "block_q", "interpret"))
+def paged_prefill_fwd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      page_table: jax.Array, pos_start: jax.Array,
+                      kv_len: jax.Array, *,
+                      window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      scale: Optional[float] = None,
+                      block_q: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Causal prefill of one prompt chunk against the paged KV pools.
+
+    q: (B, Hq, Sq, D) -- the chunk's queries, already RoPE'd at their
+    global positions; pages: (Hkv, P, page_size, D) global pools (the
+    chunk's K/V rows must already be scattered in); page_table: (B, n_kv)
+    int32; pos_start: (B,) int32 global position of the chunk's first
+    token; kv_len: (B,) int32 valid KV length (= pos_start + valid chunk
+    tokens).  All offsets are runtime values fed through scalar prefetch,
+    so one trace serves every chunk of every prompt: the KV BlockSpec
+    index map resolves logical block ki -> page_table[b, ki] and clamps
+    to the causally-valid page range of the chunk (the grid-level
+    tiling-mask skip of the dense kernel, with dynamic bounds).
+    Returns (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    n_kv = page_table.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    n_rep = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    block_q = min(block_q, max(sq, 8))
+    sq_p = (sq + block_q - 1) // block_q * block_q
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    n_q = sq_p // block_q
+
+    def q_map(bi, hi, qi, ki, pt_ref, start_ref, len_ref):
+        return (bi, hi, qi, 0)
+
+    def kv_map(bi, hi, qi, ki, pt_ref, start_ref, len_ref):
+        # clamp pruned logical blocks onto the nearest valid one so the
+        # pipeline re-uses the resident page instead of DMAing a new one
+        q_end = start_ref[bi] + (qi + 1) * block_q - 1
+        last = jnp.minimum(q_end // page_size,
+                           jnp.maximum(len_ref[bi] - 1, 0) // page_size)
+        kj = jnp.minimum(ki, last)
+        if window is not None:
+            first = jnp.maximum(
+                0, (start_ref[bi] + qi * block_q - window + 1) // page_size)
+            kj = jnp.maximum(kj, first)
+        # fully-padded q blocks of the last chunk can push `first` (and
+        # thus kj) past the table width -- clamp so the scalar-prefetch
+        # read stays in bounds (their rows are masked in the kernel)
+        return (hi // n_rep, pt_ref[bi, jnp.minimum(kj, n_kv - 1)], 0, 0)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, page_size=page_size, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, hq, n_q, n_kv),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, d), q_map),
+                pl.BlockSpec((1, 1, page_size, d), kv_map),
+                pl.BlockSpec((1, 1, page_size, d), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, d), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, d), jnp.float32),      # acc
+                pltpu.VMEM((block_q, LANES), jnp.float32),  # running max
+                pltpu.VMEM((block_q, LANES), jnp.float32),  # running sum
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos_start.astype(jnp.int32),
+      kv_len.astype(jnp.int32), q, k_pages, v_pages)
     return out[:, :, :sq, :]

@@ -3,6 +3,8 @@
 ``fastattn`` dispatches between the Pallas TPU kernel, interpret mode
 (CPU validation), and the pure-jnp flash reference, and attaches a
 recompute-based backward (custom_vjp) so the op is usable in training.
+``fastattn_paged_prefill`` is the inference-only chunked-prefill variant
+that reads K/V straight from the paged pools through the page table.
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ from repro.kernels.fastattn import ref as _ref
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12))
 def fastattn(q, k, v,
              causal: bool = True,
              window: Optional[int] = None,
@@ -28,32 +30,35 @@ def fastattn(q, k, v,
              block_q: int = 256,
              block_kv1: int = 1024,
              block_kv2: int = 256,
-             impl: str = "pallas"):
+             impl: str = "pallas",
+             kv_valid: Optional[int] = None):
     """FastAttention: (B, Hq, Sq, D) x (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
 
     impl: 'pallas' (TPU), 'interpret' (Pallas on CPU for validation), or
     'reference' (pure jnp; used for CPU dry-runs / as backward).
+    ``kv_valid`` (static) masks K/V rows past that length -- the tail of a
+    gathered paged view whose last page is only partially filled.
     """
     if impl in ("pallas", "interpret"):
         return _kernel.fastattn_fwd(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, q_offset=q_offset, block_q=block_q,
-            block_kv1=block_kv1, block_kv2=block_kv2,
+            scale=scale, q_offset=q_offset, kv_valid=kv_valid,
+            block_q=block_q, block_kv1=block_kv1, block_kv2=block_kv2,
             interpret=(impl == "interpret"))
     return _ref.flash_reference(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
-        q_offset=q_offset, block_kv=block_kv1)
+        q_offset=q_offset, kv_len=kv_valid, block_kv=block_kv1)
 
 
 def _fwd(q, k, v, causal, window, softcap, scale, q_offset,
-         block_q, block_kv1, block_kv2, impl):
+         block_q, block_kv1, block_kv2, impl, kv_valid):
     out = fastattn(q, k, v, causal, window, softcap, scale, q_offset,
-                   block_q, block_kv1, block_kv2, impl)
+                   block_q, block_kv1, block_kv2, impl, kv_valid)
     return out, (q, k, v)
 
 
 def _bwd(causal, window, softcap, scale, q_offset,
-         block_q, block_kv1, block_kv2, impl, res, g):
+         block_q, block_kv1, block_kv2, impl, kv_valid, res, g):
     # Recompute-based backward through the flash reference (same numerics,
     # linear memory).  On TPU the fwd ran the Pallas kernel; the bwd is a
     # standard-XLA chunked recompute -- documented in DESIGN.md §7.
@@ -62,10 +67,29 @@ def _bwd(causal, window, softcap, scale, q_offset,
     def f(q, k, v):
         return _ref.flash_reference(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, q_offset=q_offset, block_kv=block_kv1)
+            scale=scale, q_offset=q_offset, kv_len=kv_valid,
+            block_kv=block_kv1)
 
     _, vjp = jax.vjp(f, q, k, v)
     return vjp(g)
 
 
 fastattn.defvjp(_fwd, _bwd)
+
+
+def fastattn_paged_prefill(q, k_pages, v_pages, page_table, pos_start,
+                           kv_len, *,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           scale: Optional[float] = None,
+                           block_q: int = 256,
+                           interpret: bool = False):
+    """Chunked-prefill attention against the paged KV pools (no vjp --
+    serving only).  q: (B, Hq, Sq, D); pages (Hkv, P, page_size, D);
+    page_table (B, n_kv) int32; pos_start/kv_len (B,) int32 runtime
+    offsets (scalar-prefetched: one trace per chunk *shape*, not per
+    chunk position)."""
+    return _kernel.paged_prefill_fwd(
+        q, k_pages, v_pages, page_table, pos_start, kv_len,
+        window=window, softcap=softcap, scale=scale, block_q=block_q,
+        interpret=interpret)

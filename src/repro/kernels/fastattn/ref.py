@@ -95,18 +95,26 @@ def flash_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def flash_reference_with_lse(q, k, v, *, causal=True, window=None,
                              softcap=None, scale=None, q_offset=0,
                              kv_len=None, block_kv=512):
-    """Like flash_reference but also returns logsumexp (for CP merging)."""
+    """Like flash_reference but also returns logsumexp (for CP merging).
+
+    ``q_offset`` may be a static int (enables the static grid-level skip)
+    or a traced scalar / (B,) int32 array of per-sequence offsets (chunked
+    paged prefill: one trace serves every chunk position).
+    """
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     n_rep = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     qf = q.astype(jnp.float32)
 
+    static_offset = isinstance(q_offset, int)
     block_kv = min(block_kv, skv)
     n_chunks = (skv + block_kv - 1) // block_kv
     # Static grid-level skip: with causal masking, chunks entirely in the
-    # future of the last query row never contribute.
-    if causal:
+    # future of the last query row never contribute.  Only possible when
+    # the offset is known at trace time; dynamic offsets fall back to
+    # scanning every chunk (masking keeps them correct).
+    if causal and static_offset:
         last_q = q_offset + sq - 1
         n_chunks = min(n_chunks, last_q // block_kv + 1)
     pad = n_chunks * block_kv - min(skv, n_chunks * block_kv)
@@ -122,7 +130,9 @@ def flash_reference_with_lse(q, k, v, *, causal=True, window=None,
     kc = kc.reshape(b, hkv, n_chunks, block_kv, d).transpose(2, 0, 1, 3, 4)
     vc = vc.reshape(b, hkv, n_chunks, block_kv, d).transpose(2, 0, 1, 3, 4)
 
-    q_pos = q_offset + jnp.arange(sq)
+    # (B, Sq) global query positions; scalar offsets broadcast over batch
+    q_pos = (jnp.asarray(q_offset, jnp.int32).reshape(-1, 1)
+             + jnp.arange(sq, dtype=jnp.int32))
     effective_kv = jnp.minimum(
         jnp.asarray(kv_len if kv_len is not None else skv), skv)
 
@@ -134,12 +144,13 @@ def flash_reference_with_lse(q, k, v, *, causal=True, window=None,
         s = jnp.einsum("bhqd,bhkd->bhqk", qf, k_j) * scale
         s = _apply_softcap(s, softcap)
         kv_pos = j * block_kv + jnp.arange(block_kv)
-        mask = jnp.ones((sq, block_kv), jnp.bool_)
+        mask = jnp.ones((q_pos.shape[0], sq, block_kv), jnp.bool_)
         if causal:
-            mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+            mask = mask & (q_pos[:, :, None] >= kv_pos[None, None, :])
         if window is not None:
-            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
-        maskb = mask[None, None] & \
+            mask = mask & (q_pos[:, :, None] - kv_pos[None, None, :]
+                           < window)
+        maskb = mask[:, None] & \
             (kv_pos[None, None, None, :] <
              jnp.asarray(effective_kv).reshape(-1, 1, 1, 1))
         s = jnp.where(maskb, s, NEG_INF)

@@ -3,6 +3,9 @@
 ``paged_gather`` materialises the dense (B, Hkv, S, D) view of a paged
 pool; ``paged_decode_reference`` chains it with the dense decode oracle so
 paged kernels have an f32-softmax reference on any backend.
+``paged_prefill_reference`` is the chunked-prefill analogue: gather +
+online-softmax flash with runtime per-sequence query offsets (the
+jittable CPU path of the paged prefill kernel).
 """
 from __future__ import annotations
 
@@ -10,7 +13,8 @@ from typing import Optional
 
 import jax
 
-from repro.kernels.fastattn.ref import decode_reference  # noqa: F401
+from repro.kernels.fastattn.ref import (decode_reference,  # noqa: F401
+                                        flash_reference_with_lse)
 
 
 def paged_gather(pages: jax.Array, page_table: jax.Array) -> jax.Array:
@@ -34,3 +38,27 @@ def paged_decode_reference(q: jax.Array, k_pages: jax.Array,
     v = paged_gather(v_pages, page_table)
     return decode_reference(q, k, v, kv_len, window=window, softcap=softcap,
                             scale=scale)
+
+
+def paged_prefill_reference(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, page_table: jax.Array,
+                            pos_start: jax.Array, kv_len: jax.Array, *,
+                            window: Optional[int] = None,
+                            softcap: Optional[float] = None,
+                            scale: Optional[float] = None,
+                            block_kv: int = 512) -> jax.Array:
+    """Chunked-prefill attention oracle over paged pools.
+
+    q: (B, Hq, Sq, D) chunk queries; pos_start: (B,) int32 global position
+    of each sequence's chunk start; kv_len: (B,) int32 valid KV length.
+    Both offsets are runtime values, so a single trace serves every chunk
+    of every prompt (the gathered view has the fixed page-table width).
+    Returns (B, Hq, Sq, D); rows past the valid chunk length are garbage
+    and must be ignored by the caller.
+    """
+    k = paged_gather(k_pages, page_table)
+    v = paged_gather(v_pages, page_table)
+    out, _ = flash_reference_with_lse(
+        q, k, v, causal=True, window=window, softcap=softcap, scale=scale,
+        q_offset=pos_start, kv_len=kv_len, block_kv=block_kv)
+    return out

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.core.fastattention import (default_paged_impl, fast_attention,
-                                      fast_attention_decode)
+                                      fast_attention_decode,
+                                      fast_attention_prefill_paged)
 from repro.layers import common, rotary
 from repro.sharding.rules import constrain
 
@@ -185,6 +186,65 @@ def init_kv_pages(cfg: ModelConfig, num_pages: int, page_size: int,
     appear in the storage shape -- the pool is the memory budget."""
     shape = (cfg.num_kv_heads, num_pages, page_size, cfg.head_dim)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def scatter_kv_pages(cache: KVCache, k_new, v_new, page_table, positions,
+                     n_valid) -> KVCache:
+    """Scatter a chunk of new K/V rows into the paged pools.
+
+    k_new/v_new: (B, S, Hkv, D); positions: (B, S) int32 global token
+    positions; n_valid: (B,) int32 -- rows past it (chunk padding) are
+    redirected into the scratch page so fixed-size chunks never touch
+    pages owned by live sequences.  The pages covering the valid
+    positions must already be materialised in ``page_table``.
+    """
+    hkv, npages, ps, d = cache.k.shape
+    b, s = positions.shape
+    page = page_table[jnp.arange(b)[:, None], positions // ps]   # (B, S)
+    flat = page * ps + positions % ps
+    valid = jnp.arange(s, dtype=jnp.int32)[None] < n_valid[:, None]
+    flat = jnp.where(valid, flat, 0)          # padding -> scratch page 0
+    # (B, S, Hkv, D) -> (Hkv, B, S, D) rows scattered at flat [b, s]
+    k = cache.k.reshape(hkv, npages * ps, d).at[:, flat].set(
+        k_new.astype(cache.k.dtype).transpose(2, 0, 1, 3))
+    v = cache.v.reshape(hkv, npages * ps, d).at[:, flat].set(
+        v_new.astype(cache.v.dtype).transpose(2, 0, 1, 3))
+    return KVCache(k.reshape(hkv, npages, ps, d),
+                   v.reshape(hkv, npages, ps, d))
+
+
+def apply_attention_prefill_paged(params, x, cfg: ModelConfig,
+                                  cache: KVCache, *, page_table, pos_start,
+                                  n_valid, window: Optional[int] = None,
+                                  impl: Optional[str] = None):
+    """Chunked prefill against paged KV pools: one prompt chunk through
+    full (not per-token) attention.
+
+    x: (B, S_chunk, D) -- a fixed-size chunk, possibly padded past
+    ``n_valid``; pos_start: (B,) int32 global position of each sequence's
+    chunk start; page_table: (B, n_kv) int32.  The chunk's K/V rows are
+    scattered into their pages (padding rows into scratch), then the
+    chunk attends to every cached position <= its own through the page
+    table.  All offsets are runtime values: one jit trace serves every
+    chunk of every prompt.  Returns (out (B, S_chunk, D), new pools);
+    output rows past ``n_valid`` are garbage and must be ignored.
+    """
+    impl = impl or default_paged_impl()
+    b, s, _ = x.shape
+    positions = pos_start.astype(jnp.int32)[:, None] + \
+        jnp.arange(s, dtype=jnp.int32)[None]
+    rope_pos = positions
+    if cfg.rope_type == "mrope":   # text continuation: t=h=w=pos
+        rope_pos = jnp.broadcast_to(positions, (3, b, s))
+    q, k_new, v_new = _project_qkv(params, x, cfg, rope_pos)
+    cache = scatter_kv_pages(cache, k_new, v_new, page_table, positions,
+                             n_valid)
+    kv_len = pos_start.astype(jnp.int32) + n_valid.astype(jnp.int32)
+    out = fast_attention_prefill_paged(
+        q, cache.k, cache.v, page_table, pos_start, kv_len,
+        window=window, softcap=cfg.attn_logit_softcap, impl=impl)
+    out = out.reshape(b, s, cfg.q_dim)
+    return common.dense(out, params["wo"]), cache
 
 
 def apply_attention_decode_paged(params, x, cfg: ModelConfig,

@@ -216,6 +216,26 @@ def apply_block(params, x, cfg: ModelConfig, kind: str, *, positions,
 # decode (one token, with cache)
 # ---------------------------------------------------------------------------
 
+def apply_block_prefill_paged(params, x, cfg: ModelConfig, kind: str,
+                              cache, *, page_table, pos_start, n_valid,
+                              impl: Optional[str] = None):
+    """Chunked paged prefill: one prompt chunk (B, S, D) through the full
+    block forward, K/V scattered into the paged pools.  Rows past
+    ``n_valid`` are padding (their outputs are garbage, their K/V lands
+    in scratch)."""
+    if kind not in ("attn", "attn_local", "moe"):
+        raise NotImplementedError(
+            f"paged serving supports attention-cache blocks only, "
+            f"got {kind!r}")
+    h = apply_norm(params["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    a, cache = attn_mod.apply_attention_prefill_paged(
+        params["attn"], h, cfg, cache, page_table=page_table,
+        pos_start=pos_start, n_valid=n_valid, window=_window(cfg, kind),
+        impl=impl)
+    x = _attn_block_tail(params, x, a, cfg, kind)
+    return constrain(x, "batch", "seq", None), cache
+
+
 def apply_block_decode_paged(params, x, cfg: ModelConfig, kind: str,
                              cache, *, page_table, pos,
                              impl: Optional[str] = None):

@@ -8,7 +8,7 @@ positions (whisper's learned decoder table does not scale to the assigned
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -81,7 +81,7 @@ def _block_logical_dec(cfg):
 @dataclass
 class EncDec:
     cfg: ModelConfig
-    parallel: ParallelConfig = ParallelConfig()
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
 
     def init(self, key) -> dict:
         cfg = self.cfg

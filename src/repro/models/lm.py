@@ -9,7 +9,7 @@ devices) with configurable rematerialization.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, List, Optional, Tuple
 
 import jax
@@ -52,7 +52,7 @@ def periodic_segments(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
 @dataclass
 class LM:
     cfg: ModelConfig
-    parallel: ParallelConfig = ParallelConfig()
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -204,14 +204,14 @@ class LM:
             tree[f"seg{si}"] = unit_tree
         return tree
 
-    def _decode_segments(self, params, token, cache, block_fn):
-        """Shared decode-step skeleton: embed the token, thread (x, cache)
-        through every segment (scanning stacked units), final-norm and
-        project to logits.  ``block_fn(block_params, x, kind, block_cache)
-        -> (x, new_block_cache)`` supplies the per-block decode (dense or
-        paged)."""
+    def _cached_segments(self, params, x, cache, block_fn):
+        """Shared cached-forward skeleton: thread (x, cache) through every
+        segment (scanning stacked units), final-norm and project to
+        logits.  ``block_fn(block_params, x, kind, block_cache) ->
+        (x, new_block_cache)`` supplies the per-block forward (one-token
+        decode or a whole prefill chunk, dense or paged caches).
+        x: (B, S, D) embedded input; returns (logits (B, S, V), cache)."""
         cfg = self.cfg
-        x = embed_tokens(params["embedding"], token[:, None], cfg)
         new_cache = {}
         for si, (unit, reps) in enumerate(self.segs):
 
@@ -235,14 +235,16 @@ class LM:
             new_cache[f"seg{si}"] = nc
         x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
         logits = lm_logits(params["embedding"], x, cfg)
-        return logits[:, 0], new_cache
+        return logits, new_cache
 
     def decode_step(self, params, token, cache, pos, *, impl=None):
         """token: (B,) int32; pos: scalar int32.  Returns (logits, cache)."""
         def block_fn(bp, x, kind, bc):
             return B.apply_block_decode(bp, x, self.cfg, kind, bc, pos=pos,
                                         impl=impl)
-        return self._decode_segments(params, token, cache, block_fn)
+        x = embed_tokens(params["embedding"], token[:, None], self.cfg)
+        logits, cache = self._cached_segments(params, x, cache, block_fn)
+        return logits[:, 0], cache
 
     def decode_step_paged(self, params, token, cache, page_table, pos, *,
                           impl=None):
@@ -253,7 +255,28 @@ class LM:
             return B.apply_block_decode_paged(
                 bp, x, self.cfg, kind, bc, page_table=page_table, pos=pos,
                 impl=impl)
-        return self._decode_segments(params, token, cache, block_fn)
+        x = embed_tokens(params["embedding"], token[:, None], self.cfg)
+        logits, cache = self._cached_segments(params, x, cache, block_fn)
+        return logits[:, 0], cache
+
+    def prefill_chunk_paged(self, params, tokens, cache, page_table,
+                            pos_start, n_valid, *, impl=None):
+        """Chunked paged prefill: one fixed-size prompt chunk through the
+        full transformer forward, writing K/V into the paged pools.
+
+        tokens: (B, C) int32 chunk (padded past ``n_valid``); page_table:
+        (B, n_kv) int32; pos_start / n_valid: (B,) int32 runtime offsets
+        -- jit traces are keyed by the chunk size C, never by prompt
+        length or chunk position.  Returns (logits (B, C, V), cache);
+        logit rows past ``n_valid`` are garbage (their K/V went to the
+        scratch page).
+        """
+        def block_fn(bp, x, kind, bc):
+            return B.apply_block_prefill_paged(
+                bp, x, self.cfg, kind, bc, page_table=page_table,
+                pos_start=pos_start, n_valid=n_valid, impl=impl)
+        x = embed_tokens(params["embedding"], tokens, self.cfg)
+        return self._cached_segments(params, x, cache, block_fn)
 
     # ------------------------------------------------------------------
     def loss(self, params, tokens, labels, *, impl=None):

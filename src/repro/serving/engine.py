@@ -10,7 +10,12 @@ paper-faithful fast path.
 ``generate_stream`` is the multi-tenant path: paged KV cache + continuous
 batching.  Sequences share global page pools, a host-side scheduler admits
 and retires requests every step, and tokens stream out per request as they
-are produced -- no sequence waits for the batch.
+are produced -- no sequence waits for the batch.  Prompts are prefilled in
+fixed ``prefill_chunk`` token chunks through the full transformer forward
+(the paper's tiled prefill kernel with runtime q offsets) interleaved with
+decode steps under a ``prefill_token_budget``, so a long newcomer never
+stalls the tokens of running sequences and time-to-first-token is
+O(prompt/chunk) kernel launches instead of O(prompt) decode steps.
 """
 from __future__ import annotations
 
@@ -26,7 +31,8 @@ from repro.config import ModelConfig, ParallelConfig, ServeConfig
 from repro.core.fastattention import default_paged_impl
 from repro.core.offload import HostOffloadEngine, OffloadPlan, plan_offload
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import ContinuousBatchScheduler, Request
+from repro.serving.scheduler import (RUNNING, ContinuousBatchScheduler,
+                                     Request)
 
 
 def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
@@ -34,7 +40,10 @@ def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
     if top_k > 1:
-        vals, _ = jax.lax.top_k(lf, top_k)
+        # lax.top_k rejects k > vocab; clamping makes oversized k mean
+        # "no truncation" instead of a crash
+        k = min(top_k, lf.shape[-1])
+        vals, _ = jax.lax.top_k(lf, k)
         thresh = vals[..., -1:]
         lf = jnp.where(lf < thresh, -1e30, lf)
     return jax.random.categorical(key, lf).astype(jnp.int32)
@@ -53,28 +62,25 @@ class ServeEngine:
     model: object
     params: dict
     cfg: ModelConfig
-    serve: ServeConfig = ServeConfig()
+    serve: ServeConfig = field(default_factory=ServeConfig)
     offload: Optional[HostOffloadEngine] = None
-    # jitted paged prefill/decode pairs keyed by resolved paged impl
+    # jitted paged prefill/decode triples keyed by resolved paged impl
     _paged_fn_cache: dict = field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         self._decode = jax.jit(
             lambda p, t, c, pos: self.model.decode_step(p, t, c, pos),
             donate_argnums=(2,))   # KV cache updated in place
+        # how many times the chunked-prefill function was *traced* (not
+        # called): the trace-count test asserts it stays at 1 no matter
+        # how many prompt lengths stream through
+        self.prefill_trace_count = 0
 
     # ------------------------------------------------------------------
     def prefill(self, tokens: jax.Array):
         """tokens: (B, S_prompt).  Returns (cache, last_logits)."""
         b, s = tokens.shape
         cache = self.model.init_cache(b, self.serve.max_seq_len)
-        logits = None
-
-        def body(carry, t):
-            cache = carry
-            lg, cache = self.model.decode_step(
-                self.params, tokens[:, t], cache, t)
-            return cache, lg
 
         # scan over prompt positions (jit'd once)
         def scan_fn(params, tokens, cache):
@@ -114,10 +120,12 @@ class ServeEngine:
         return self.serve.paged_impl
 
     def _paged_fns(self):
-        """Jitted paged decode step + paged prefill, keyed on the resolved
-        impl so a serve-config change after first use is honoured (the
-        prefill scan additionally retraces once per distinct prompt
-        length)."""
+        """Jitted paged fns keyed on the resolved impl so a serve-config
+        change after first use is honoured: (scan prefill, chunked
+        prefill, fused decode step).  The scan prefill retraces once per
+        distinct prompt length (that is why it is the legacy path); the
+        chunked prefill traces exactly once -- chunk shape, page-table
+        width and position offsets are all runtime values."""
         impl = self._paged_impl()
         if (impl == "paged" and jax.default_backend() == "tpu"
                 and self.serve.page_size % 128):
@@ -128,12 +136,13 @@ class ServeEngine:
                 "'paged_reference'")
         if impl not in self._paged_fn_cache:
             model = self.model
+            engine = self
 
             def dec(params, tok, pools, table, pos):
                 return model.decode_step_paged(params, tok, pools, table,
                                                pos, impl=impl)
 
-            def pre(params, prompt, pools, table_row):
+            def pre_scan(params, prompt, pools, table_row):
                 s = prompt.shape[1]
 
                 def step(c, t):
@@ -145,8 +154,22 @@ class ServeEngine:
                 pools, lgs = jax.lax.scan(step, pools, jnp.arange(s))
                 return pools, lgs[-1]
 
+            def pre_chunk(params, chunk, pools, table_row, pos_start,
+                          n_valid):
+                engine.prefill_trace_count += 1    # host-side, trace-time
+                logits, pools = model.prefill_chunk_paged(
+                    params, chunk, pools, table_row, pos_start, n_valid,
+                    impl=impl)
+                # the chunk's last *valid* row: only meaningful logits --
+                # padding rows attended through the scratch page
+                last = jnp.take_along_axis(
+                    logits, jnp.maximum(n_valid - 1, 0)[:, None, None],
+                    axis=1)[:, 0]
+                return pools, last
+
             self._paged_fn_cache[impl] = (
-                jax.jit(pre, donate_argnums=(2,)),
+                jax.jit(pre_scan, donate_argnums=(2,)),
+                jax.jit(pre_chunk, donate_argnums=(2,)),
                 jax.jit(dec, donate_argnums=(2,)))
         return self._paged_fn_cache[impl]
 
@@ -158,9 +181,11 @@ class ServeEngine:
         Yields StreamEvent(request_id, token, index, finished) as tokens
         are produced.  Each step the scheduler retires finished sequences
         (reclaiming their pages), admits waiting requests into freed
-        slots, prefills the newcomers into their own pages, then runs one
-        fused decode step for every running slot.  Idle slots write to
-        the scratch page and are ignored.
+        slots, spends up to ``prefill_token_budget`` prompt tokens on
+        chunked prefill of PREFILLING slots, then runs one fused decode
+        step for every RUNNING slot -- decode tokens keep streaming while
+        long prompts prefill.  Idle and mid-prefill slots write to the
+        scratch page and are ignored.
         """
         serve = self.serve
         mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
@@ -175,15 +200,28 @@ class ServeEngine:
             sched.submit(r)
         return self._stream(mgr, sched, key)
 
+    def _first_token(self, req, slot, last_logits, next_tok, key):
+        """Sample a freshly-prefilled sequence's first token and flip the
+        request into the decoding state."""
+        req.state = RUNNING
+        tok = int(sample_token(
+            last_logits, key, temperature=self.serve.temperature,
+            top_k=self.serve.top_k)[0])
+        req.generated.append(tok)
+        next_tok[slot] = tok
+        return StreamEvent(req.id, tok, 0, req.done)
+
     def _stream(self, mgr: PagedKVCache, sched: ContinuousBatchScheduler,
                 key: Optional[jax.Array]):
         serve = self.serve
         ps = mgr.page_size
         npages = mgr.num_pages
         pools = self.model.init_paged_cache(npages, ps)
-        prefill, decode = self._paged_fns()
+        pre_scan, pre_chunk, decode = self._paged_fns()
         key = key if key is not None else jax.random.PRNGKey(serve.seed)
         next_tok = np.zeros((serve.max_batch,), np.int32)
+        chunk = serve.prefill_chunk_tokens
+        budget = serve.prefill_budget_tokens
 
         while sched.has_work:
             sched.retire()
@@ -200,22 +238,41 @@ class ServeEngine:
                     f"{-(-req.target_len // ps)} pages, pool has "
                     f"{npages - 1}")
 
-            for slot, req in admitted:
-                mgr.append(slot, len(req.prompt))      # prompt pages
-                table_row = jnp.asarray(
-                    mgr.device_table()[slot:slot + 1])
-                pools, last_logits = prefill(
-                    self.params, jnp.asarray(req.prompt[None]), pools,
-                    table_row)
-                key, sub = jax.random.split(key)
-                tok = int(sample_token(
-                    last_logits, sub, temperature=serve.temperature,
-                    top_k=serve.top_k)[0])
-                req.generated.append(tok)
-                next_tok[slot] = tok
-                yield StreamEvent(req.id, tok, 0, req.done)
+            # ---- prefill phase -------------------------------------------
+            if serve.prefill_mode == "scan":
+                # legacy: whole prompt at once, one token per scan step,
+                # retraced per prompt length (the equivalence oracle)
+                for slot, req in admitted:
+                    mgr.append(slot, len(req.prompt))
+                    pools, last_logits = pre_scan(
+                        self.params, jnp.asarray(req.prompt[None]), pools,
+                        jnp.asarray(mgr.device_row(slot)))
+                    req.prefilled = len(req.prompt)
+                    key, sub = jax.random.split(key)
+                    yield self._first_token(req, slot, last_logits,
+                                            next_tok, sub)
+            else:
+                # chunked: fixed-size chunks through the full forward,
+                # budgeted per step so decode slots keep producing
+                buf = np.zeros((1, chunk), np.int32)
+                for slot, req, start, n in sched.prefill_schedule(budget,
+                                                                  chunk):
+                    mgr.append(slot, n)            # chunk's pages
+                    buf[:] = 0
+                    buf[0, :n] = req.prompt[start:start + n]
+                    pools, last_logits = pre_chunk(
+                        self.params, jnp.asarray(buf), pools,
+                        jnp.asarray(mgr.device_row(slot)),
+                        jnp.full((1,), start, jnp.int32),
+                        jnp.full((1,), n, jnp.int32))
+                    req.prefilled = start + n
+                    if req.prefill_done:
+                        key, sub = jax.random.split(key)
+                        yield self._first_token(req, slot, last_logits,
+                                                next_tok, sub)
 
-            running = [(s, r) for s, r in sched.running() if not r.done]
+            # ---- decode phase --------------------------------------------
+            running = [(s, r) for s, r in sched.decoding() if not r.done]
             if not running:
                 continue
             # materialise the page (maybe a fresh one) every running
@@ -225,9 +282,15 @@ class ServeEngine:
             for slot, _ in running:
                 mgr.append(slot, 1)
                 pos_np[slot] = mgr.seq_len(slot) - 1
+            table = mgr.device_table()
+            for slot, _ in sched.prefilling():
+                # mid-prefill slots sit out the decode step: scratch-page
+                # table row + pos 0, like idle slots (their real pages
+                # must not see the decode step's writes)
+                table[slot, :] = mgr.SCRATCH
             logits, pools = decode(
                 self.params, jnp.asarray(next_tok), pools,
-                jnp.asarray(mgr.device_table()), jnp.asarray(pos_np))
+                jnp.asarray(table), jnp.asarray(pos_np))
             key, sub = jax.random.split(key)
             toks = np.asarray(sample_token(
                 logits, sub, temperature=serve.temperature,

@@ -90,6 +90,12 @@ class PagedKVCache:
         manager keeps mutating while the device step is in flight)."""
         return self.table.copy()
 
+    def device_row(self, slot: int) -> np.ndarray:
+        """One slot's (1, max_pages_per_seq) table snapshot -- what a
+        single-sequence prefill chunk needs (avoids copying the whole
+        table per chunk)."""
+        return self.table[slot:slot + 1].copy()
+
     # -- alloc / append / free -----------------------------------------
     def alloc(self, slot: int) -> None:
         """Activate an empty slot (no pages yet -- append() materialises

@@ -13,6 +13,12 @@ allocated lazily (``PagedKVCache.append``), so short-finishing sequences
 return their slack early -- the reservation only gates admission, it never
 pins physical pages.  This makes the engine deadlock-free without
 preemption; preemption/swap is the ROADMAP follow-up that relaxes it.
+
+Prefill is a first-class scheduler state (Sarathi-style chunked prefill):
+an admitted request is PREFILLING until its whole prompt has been pushed
+through the model in ``prefill_chunk``-token chunks; ``prefill_schedule``
+plans each engine step's chunk work under a token budget so a long
+newcomer prompt never stalls the decode latency of running sequences.
 """
 from __future__ import annotations
 
@@ -24,7 +30,8 @@ import numpy as np
 
 from repro.serving.paged_cache import PagedKVCache, pages_needed
 
-WAITING, RUNNING, FINISHED = "WAITING", "RUNNING", "FINISHED"
+WAITING, PREFILLING, RUNNING, FINISHED = (
+    "WAITING", "PREFILLING", "RUNNING", "FINISHED")
 
 
 @dataclass
@@ -37,6 +44,7 @@ class Request:
     state: str = WAITING
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
+    prefilled: int = 0                 # prompt tokens already in the cache
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -53,6 +61,10 @@ class Request:
         return len(self.prompt) + self.max_new_tokens
 
     @property
+    def prefill_done(self) -> bool:
+        return self.prefilled >= len(self.prompt)
+
+    @property
     def done(self) -> bool:
         return (len(self.generated) >= self.max_new_tokens
                 or (self.eos_id is not None and len(self.generated) > 0
@@ -60,8 +72,9 @@ class Request:
 
 
 class ContinuousBatchScheduler:
-    """Admits waiting requests into free decode slots, retires finished
-    sequences, and reclaims their pages."""
+    """Admits waiting requests into free decode slots, schedules chunked
+    prefill under a token budget, retires finished sequences, and
+    reclaims their pages."""
 
     def __init__(self, cache: PagedKVCache, max_slots: Optional[int] = None):
         self.cache = cache
@@ -70,6 +83,8 @@ class ContinuousBatchScheduler:
         self.waiting: deque = deque()
         self.slots: List[Optional[Request]] = [None] * self.max_slots
         self.finished: List[Request] = []
+        self._admit_seq = 0
+        self._admitted_at: dict = {}        # id -> admission sequence no.
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -104,13 +119,16 @@ class ContinuousBatchScheduler:
                 req.state = FINISHED
                 req.slot = None
                 self.slots[slot] = None
+                self._admitted_at.pop(req.id, None)
                 self.finished.append(req)
                 retired.append(req)
         return retired
 
     def admit(self) -> List[Tuple[int, Request]]:
         """Fill free slots from the waiting queue (FIFO, no skipping: a
-        large head-of-line request blocks rather than starves)."""
+        large head-of-line request blocks rather than starves).  Admitted
+        requests enter PREFILLING; the engine flips them to RUNNING once
+        their whole prompt is in the cache."""
         admitted = []
         reserved = self._reserved_pages()
         for slot in range(self.max_slots):
@@ -122,16 +140,56 @@ class ContinuousBatchScheduler:
                 break
             self.waiting.popleft()
             self.cache.alloc(slot)
-            req.state = RUNNING
+            req.state = PREFILLING
+            req.prefilled = 0
             req.slot = slot
             self.slots[slot] = req
+            self._admitted_at[req.id] = self._admit_seq
+            self._admit_seq += 1
             reserved += worst
             admitted.append((slot, req))
         return admitted
 
+    def prefill_schedule(self, budget: int,
+                         chunk: int) -> List[Tuple[int, Request, int, int]]:
+        """Plan this step's chunked-prefill work: ``(slot, req, start,
+        n_tokens)`` jobs in admission order.  ``budget`` is a soft cap
+        rounded up to whole chunks (chunks are fixed-cost launches, so
+        sub-chunk budgeting buys nothing): planning stops at the first
+        chunk boundary at or past it, overshooting by at most
+        ``chunk - 1`` tokens.  Always emits at least one chunk when
+        anything is PREFILLING (a zero/tiny budget must not starve
+        prefill), and completes oldest prompts first so their first
+        token streams out as early as possible."""
+        jobs: List[Tuple[int, Request, int, int]] = []
+        spent = 0
+        for slot, req in self.prefilling():
+            start = req.prefilled
+            while start < len(req.prompt):
+                if jobs and spent >= budget:
+                    return jobs
+                n = min(chunk, len(req.prompt) - start)
+                jobs.append((slot, req, start, n))
+                start += n
+                spent += n
+        return jobs
+
     # -- introspection ----------------------------------------------------
     def running(self) -> List[Tuple[int, Request]]:
+        """All occupied slots (prefilling or decoding)."""
         return [(s, r) for s, r in enumerate(self.slots) if r is not None]
+
+    def prefilling(self) -> List[Tuple[int, Request]]:
+        """Slots still pushing prompt chunks, oldest admission first."""
+        return sorted(
+            ((s, r) for s, r in enumerate(self.slots)
+             if r is not None and r.state == PREFILLING),
+            key=lambda sr: self._admitted_at.get(sr[1].id, 0))
+
+    def decoding(self) -> List[Tuple[int, Request]]:
+        """Slots with a fully-prefilled sequence producing tokens."""
+        return [(s, r) for s, r in enumerate(self.slots)
+                if r is not None and r.state == RUNNING]
 
     @property
     def has_work(self) -> bool:

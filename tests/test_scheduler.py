@@ -14,7 +14,7 @@ import pytest
 from repro.config import ParallelConfig, ServeConfig, get_model_config, \
     reduce_for_smoke
 from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import (FINISHED, RUNNING, WAITING,
+from repro.serving.scheduler import (FINISHED, PREFILLING, RUNNING, WAITING,
                                      ContinuousBatchScheduler, Request)
 
 
@@ -37,7 +37,9 @@ def test_admit_fifo_and_slot_assignment():
         sched.submit(r)
     admitted = sched.admit()
     assert [(s, r.id) for s, r in admitted] == [(0, 0), (1, 1)]
-    assert reqs[0].state == RUNNING and reqs[2].state == WAITING
+    # admission enters the chunked-prefill state; the engine flips to
+    # RUNNING once the whole prompt is in the cache
+    assert reqs[0].state == PREFILLING and reqs[2].state == WAITING
     assert sched.admit() == []                   # no free slot
 
     # finishing request 0 frees its slot; request 2 takes it
@@ -79,6 +81,35 @@ def test_oversized_request_rejected_at_submit():
     sched2 = ContinuousBatchScheduler(cache2)
     with pytest.raises(ValueError, match="max_seq_len"):
         sched2.submit(_req(0, 8, 4))
+
+
+def test_prefill_schedule_budget_and_order():
+    """Chunk planning: admission order, token budget, >= 1 chunk per step
+    even when the budget is smaller than a chunk."""
+    cache = PagedKVCache(num_pages=64, page_size=4, max_slots=3,
+                         max_pages_per_seq=16)
+    sched = ContinuousBatchScheduler(cache)
+    a, b = _req(0, 10, 2), _req(1, 7, 2)
+    sched.submit(a)
+    sched.submit(b)
+    sched.admit()
+
+    # budget 8, chunk 4: two chunks of the oldest prompt, nothing of b
+    jobs = sched.prefill_schedule(budget=8, chunk=4)
+    assert [(r.id, s, n) for _, r, s, n in jobs] == [(0, 0, 4), (0, 4, 4)]
+    a.prefilled = 8                              # engine ran the chunks
+    # next step: a's 2-token tail, then b's chunks until the budget trips
+    jobs = sched.prefill_schedule(budget=8, chunk=4)
+    assert [(r.id, s, n) for _, r, s, n in jobs] == \
+        [(0, 8, 2), (1, 0, 4), (1, 4, 3)]
+    a.prefilled = 10
+    a.state = RUNNING
+    # zero budget still makes progress (one chunk minimum)
+    jobs = sched.prefill_schedule(budget=0, chunk=4)
+    assert [(r.id, s, n) for _, r, s, n in jobs] == [(1, 0, 4)]
+    b.prefilled = 7
+    b.state = RUNNING
+    assert sched.prefill_schedule(budget=8, chunk=4) == []
 
 
 def test_eos_finishes_early():
@@ -160,6 +191,40 @@ def test_stream_matches_dense_generate(tiny_engine):
     req = Request(id=0, prompt=prompt, max_new_tokens=8)
     list(engine.generate_stream([req]))
     assert req.generated == dense.tolist()
+
+
+def test_decode_interleaves_with_long_prefill(tiny_engine):
+    """A long newcomer prompt must not stall running decode slots: with a
+    per-step prefill token budget, the short sequence keeps producing
+    tokens between the long prompt's chunks, and the long prompt's first
+    token only arrives after several engine steps."""
+    serve = ServeConfig(max_batch=2, max_seq_len=128, top_k=1,
+                        page_size=8, prefill_chunk=8,
+                        prefill_token_budget=8)
+    engine, cfg = tiny_engine(serve)
+    rng = np.random.default_rng(7)
+    short = Request(id=0, prompt=rng.integers(0, cfg.vocab_size, size=4),
+                    max_new_tokens=12)
+    long = Request(id=1, prompt=rng.integers(0, cfg.vocab_size, size=48),
+                   max_new_tokens=2)
+    events = list(engine.generate_stream([short, long]))
+
+    first_long = next(i for i, e in enumerate(events)
+                      if e.request_id == 1)
+    short_before = sum(1 for e in events[:first_long]
+                       if e.request_id == 0)
+    # the long prompt needs 48/8 = 6 chunk steps (minus the step its
+    # admission shares with short's whole prefill); short decodes once
+    # per step in the meantime
+    assert short_before >= 4, (short_before, events)
+    assert all(r.state == FINISHED for r in (short, long))
+
+    # interleaving must not change what either sequence decodes
+    for r in (short, long):
+        solo = Request(id=r.id, prompt=r.prompt,
+                       max_new_tokens=r.max_new_tokens)
+        list(engine.generate_stream([solo]))
+        assert solo.generated == r.generated, r.id
 
 
 def test_pool_too_small_raises(tiny_engine):
