@@ -1,7 +1,8 @@
 """Serving benchmark: paged KV + continuous batching + chunked prefill.
 
-Two sections, emitted together as machine-readable ``BENCH_serving.json``
-at the repo root (the perf baseline future PRs regress against):
+Three sections, emitted together as machine-readable
+``BENCH_serving.json`` at the repo root (the perf baseline future PRs
+regress against):
 
 * **mixed traffic** -- streams a queue of requests with randomised
   prompt/generation lengths through ``ServeEngine.generate_stream`` and
@@ -14,6 +15,14 @@ at the repo root (the perf baseline future PRs regress against):
   decode step per token, PR 1) vs chunked paged prefill (fixed-size
   chunks through the full tiled forward), reporting prefill tokens/s and
   the chunked/scan speedup.
+* **oversubscription** -- offered load deliberately exceeds the pool
+  (every request realises its worst case; the pool holds ``pool_frac``
+  of the total demand).  Runs the same workload under the PR 1
+  worst-case-reservation admission and under optimistic admission with
+  preemption (swap-to-host / recompute), reporting preemption counts,
+  swap bytes and the pool high-water-mark: reservation leaves the pool
+  under-subscribed, pressure-managed admission drives it to ~100% with
+  zero caller-visible failures.
 
     PYTHONPATH=src python -m benchmarks.serving_bench \
         [--arch gemma2-2b] [--requests 12] [--prefill-len 512]
@@ -51,6 +60,28 @@ def _small_config(cfg):
         cfg, num_layers=4, d_model=heads * head_dim, head_dim=head_dim,
         d_ff=4 * heads * head_dim if cfg.d_ff else 0, vocab_size=1024,
         window_size=128 if cfg.window_size else None)
+
+
+def _warm(engine, cfg, serve, rng):
+    """Compile everything the timed region will hit: the fused decode
+    step, a multi-chunk prompt, and every power-of-two batched-prefill
+    launch width up to max_batch (w concurrent short prompts prefill in
+    one step -> one width-w launch)."""
+    widths, w = [], 1
+    while w < serve.max_batch:
+        widths.append(w)
+        w *= 2
+    widths.append(serve.max_batch)
+    wid = -1
+    for w in widths:
+        warms = []
+        for i in range(w):
+            wid -= 1
+            n = min(serve.prefill_chunk_tokens + 1,
+                    serve.max_seq_len - 2) if (w == 1 and i == 0) else 3 + i
+            warms.append(Request(id=wid, prompt=rng.integers(
+                0, cfg.vocab_size, size=n), max_new_tokens=2))
+        list(engine.generate_stream(warms))
 
 
 def _build(arch: str, smoke: bool, small: bool = False):
@@ -95,12 +126,9 @@ def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
         reqs.append(Request(id=i, prompt=rng.integers(
             0, cfg.vocab_size, size=s), max_new_tokens=n))
 
-    # warmup: chunked prefill + fused decode trace once; run a couple of
-    # short requests through so the timed region is not compile-dominated
-    warms = [Request(id=-1 - i, prompt=rng.integers(
-                 0, cfg.vocab_size, size=s), max_new_tokens=2)
-             for i, s in enumerate((3, serve.prefill_chunk_tokens + 1))]
-    list(engine.generate_stream(warms))
+    # warmup: every batched-prefill width + multi-chunk prefill + fused
+    # decode, so the timed region is not compile-dominated
+    _warm(engine, cfg, serve, rng)
 
     t0 = time.perf_counter()
     ttft = {}
@@ -179,6 +207,85 @@ def prefill_bench(arch: str = "gemma2-2b", prompt_len: int = 512,
     return out
 
 
+def oversubscribe(arch: str = "gemma2-2b", n_requests: int = 8,
+                  max_batch: int = 6, page_size: int = 0,
+                  max_seq_len: int = 64, pool_frac: float = 0.6,
+                  preempt_policy: str = "swap", seed: int = 0,
+                  smoke: bool = True, built=None) -> dict:
+    """Offered load > pool capacity: reservation baseline vs optimistic
+    admission + preemption on the identical workload and pool.  Needs
+    enough decode slots that the *concurrent* demand of the slots can
+    exceed the pool -- otherwise nothing ever pressures it."""
+    page_size = page_size or (
+        128 if jax.default_backend() == "tpu" else 16)
+    max_seq_len = max(max_seq_len, 4 * page_size)
+    cfg, model, params = built or _build(arch, smoke)
+
+    def make_requests():
+        # fresh rng per run: both admission policies must see the
+        # identical workload.  Every request runs to max_new_tokens (no
+        # eos), so the offered worst-case demand is fully realised.
+        rng = np.random.default_rng(seed)
+        reqs = []
+        for i in range(n_requests):
+            if i % 3 == 0:
+                s = int(rng.integers(max_seq_len // 4, max_seq_len // 2))
+            else:
+                s = int(rng.integers(4, max(5, max_seq_len // 8)))
+            reqs.append(Request(id=i, prompt=rng.integers(
+                0, cfg.vocab_size, size=s),
+                max_new_tokens=max_seq_len - s))
+        return reqs
+
+    worst_pages = sum(-(-r.target_len // page_size)
+                      for r in make_requests())
+    num_pages = int(worst_pages * pool_frac) + 1
+
+    out = {
+        "requests": n_requests,
+        "worst_case_pages": worst_pages,
+        "pool_pages": num_pages - 1,
+        "pool_frac_of_worst": round((num_pages - 1) / worst_pages, 3),
+        "preempt_policy": preempt_policy,
+    }
+    for admission in ("reserved", "optimistic"):
+        serve = ServeConfig(max_batch=max_batch, max_seq_len=max_seq_len,
+                            top_k=1, page_size=page_size,
+                            num_pages=num_pages, admission=admission,
+                            preempt_policy=preempt_policy)
+        engine = ServeEngine(model=model, params=params, cfg=cfg,
+                             serve=serve)
+        _warm(engine, cfg, serve, np.random.default_rng(seed + 1))
+        reqs = make_requests()
+        failures, error = 0, None
+        t0 = time.perf_counter()
+        try:
+            events = list(engine.generate_stream(reqs))
+        except Exception as e:         # count AND surface caller failures
+            failures, events, error = 1, [], repr(e)
+        dt = time.perf_counter() - t0
+        mgr, pressure = engine.last_cache, engine.last_pressure
+        total_new = sum(r.max_new_tokens for r in reqs)
+        out[admission] = {
+            "completed": sum(1 for r in reqs if r.state == "FINISHED"),
+            "caller_failures": failures,
+            "error": error,
+            "generated_tokens": len(events),
+            "wall_s": round(dt, 3),
+            "tokens_per_s": round(total_new / dt, 1),
+            "preemptions": pressure.stats["preemptions"],
+            "swaps": pressure.stats["swaps"],
+            "recomputes": pressure.stats["recomputes"],
+            "swap_bytes_out": pressure.stats["swap_bytes_out"],
+            "swap_bytes_in": pressure.stats["swap_bytes_in"],
+            "host_pool_peak_pages": pressure.host_pool.peak_pages,
+            "peak_pages": mgr.peak_used_pages,
+            "peak_utilization": round(mgr.peak_utilization, 3),
+            "pages_leaked": mgr.used_pages,
+        }
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma2-2b")
@@ -197,7 +304,12 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-smoke) model config")
     ap.add_argument("--skip-prefill", action="store_true",
-                    help="mixed-traffic section only")
+                    help="skip the scan-vs-chunked prefill section")
+    ap.add_argument("--skip-oversub", action="store_true",
+                    help="skip the over-subscription section")
+    ap.add_argument("--oversub-requests", type=int, default=8)
+    ap.add_argument("--preempt-policy", default="swap",
+                    choices=["auto", "swap", "recompute"])
     ap.add_argument("--json-out", default=os.path.join(
         REPO_ROOT, "BENCH_serving.json"))
     args = ap.parse_args()
@@ -223,6 +335,14 @@ def main():
             arch=args.arch, prompt_len=args.prefill_len,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
             seed=args.seed, smoke=not args.full)
+    if not args.skip_oversub:
+        # pool at pool_frac of realised worst-case demand: the pressure
+        # subsystem (preempt + swap/recompute) absorbs the difference
+        report["oversubscription"] = oversubscribe(
+            arch=args.arch, n_requests=args.oversub_requests,
+            page_size=args.page_size, pool_frac=args.pool_frac,
+            preempt_policy=args.preempt_policy, seed=args.seed,
+            smoke=not args.full)
 
     def flat(prefix, d):
         for k, v in d.items():

@@ -1,7 +1,9 @@
 """Long-context serving with the T4 CPU-host cooperative offload plan.
 
 Shows: the offload planner deciding L_GPU/L_CPU for ultra-long prompts,
-the host KV engine in action, and generation through the serving engine.
+the host KV engine in action, generation through the serving engine, and
+the page-pressure manager serving a long prompt on a deliberately
+undersized page pool by swapping preempted KV to the host page pool.
 
     PYTHONPATH=src python examples/long_context_serving.py
 """
@@ -60,3 +62,41 @@ prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
                             cfg.vocab_size)
 tokens = engine.generate(prompt, 16)
 print("generated:", tokens.shape, tokens[0].tolist())
+
+# --- 4. long prompt on an undersized page pool: KV swap-to-host -------------
+# The pool holds 9 usable pages x 16 tokens = 144 cache tokens, but the
+# traffic worst-cases 3 x 96 = 288: under worst-case-reservation
+# admission the long request would just queue behind the short ones.
+# Optimistic admission runs them together; when the pool runs dry the
+# newest sequence's KV pages are swapped to the host page pool and
+# copied back when space frees up -- same tokens, ~half the device KV.
+print("\n== page pressure: long prompt on an undersized pool (swap) ==")
+from repro.serving.scheduler import Request  # noqa: E402
+
+cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
+model = build_model(cfg, ParallelConfig(remat="none"))
+params = model.init(jax.random.PRNGKey(0))
+serve = ServeConfig(max_batch=3, max_seq_len=96, top_k=1,
+                    page_size=16, num_pages=10,
+                    preempt_policy="swap", debug_invariants=True)
+engine = ServeEngine(model=model, params=params, cfg=cfg, serve=serve)
+rng = np.random.default_rng(0)
+reqs = [Request(id=0, prompt=rng.integers(0, cfg.vocab_size, size=72),
+                max_new_tokens=24),                  # 96-token worst case
+        Request(id=1, prompt=rng.integers(0, cfg.vocab_size, size=8),
+                max_new_tokens=64),
+        Request(id=2, prompt=rng.integers(0, cfg.vocab_size, size=6),
+                max_new_tokens=80)]
+for ev in engine.generate_stream(reqs):
+    if ev.finished:
+        print(f"req {ev.request_id}: {len(reqs[ev.request_id].generated)} "
+              f"tokens done (preempted "
+              f"{reqs[ev.request_id].preemptions}x)")
+mgr, pressure = engine.last_cache, engine.last_pressure
+print(f"pool: peak {mgr.peak_used_pages}/{mgr.usable_pages} pages "
+      f"({mgr.peak_utilization:.0%}); "
+      f"{pressure.stats['preemptions']} preemptions, "
+      f"{pressure.stats['swaps']} swaps "
+      f"({pressure.stats['swap_bytes_out'] / 1024:.0f} KiB to host, "
+      f"host-pool peak {pressure.host_pool.peak_pages} pages), "
+      f"{pressure.stats['recomputes']} recomputes")

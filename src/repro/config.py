@@ -261,6 +261,32 @@ class ServeConfig:
     # oracle.
     prefill_mode: str = "chunked"
 
+    # --- page pressure: optimistic admission + preemption ---------------
+    # "optimistic" admits a request when its *prompt* fits beside a small
+    # watermark reserve -- decode growth is backed by preemption instead
+    # of a reservation.  "reserved" is the PR 1 worst-case-reservation
+    # baseline (admission gated on prompt + max_new_tokens; never
+    # preempts), kept for the over-subscription bench comparison.
+    admission: str = "optimistic"
+    # Free pages held back at admission so steady decode growth rarely
+    # trips a preemption the very next step.  0 = auto (half the slots).
+    watermark_pages: int = 0
+    # Victim handling under OutOfPages: "swap" copies the victim's KV
+    # pages to the host page pool and restores them on resume (exact);
+    # "recompute" re-prefills prompt + generated tokens through chunked
+    # prefill; "auto" picks per victim via the PCIe/FLOPs cost model
+    # (core/offload.py:preempt_cost_model).
+    preempt_policy: str = "auto"
+    # Host page pool capacity (in pages) for swapped-out KV; 0 =
+    # unbounded.  A full host pool downgrades swap victims to recompute.
+    host_pool_pages: int = 0
+    # Run PagedKVCache.check_invariants every engine step (debug/tests).
+    debug_invariants: bool = False
+
+    @property
+    def watermark(self) -> int:
+        return self.watermark_pages or max(1, self.max_batch // 2)
+
     @property
     def max_pages_per_seq(self) -> int:
         return -(-self.max_seq_len // self.page_size)

@@ -118,6 +118,37 @@ class OffloadLatencyModel:
                    bytes_ / (819e9))
 
 
+def kv_page_bytes(cfg: ModelConfig, page_size: int,
+                  dtype_bytes: int = 2) -> int:
+    """Bytes of ONE KV page across all layers (K+V) -- the unit the
+    page-pressure subsystem moves over PCIe when it swaps a preempted
+    sequence's pages to the host pool."""
+    return 2 * dtype_bytes * cfg.num_layers * cfg.kv_dim * page_size
+
+
+def preempt_cost_model(cfg: ModelConfig, *, n_pages: int, n_tokens: int,
+                       page_size: int,
+                       model: OffloadLatencyModel = OffloadLatencyModel(),
+                       dtype_bytes: int = 2,
+                       swap_latency_s: float = 5e-4):
+    """(swap_s, recompute_s) for evicting a sequence with ``n_pages``
+    materialised pages covering ``n_tokens`` tokens.
+
+    Swap is a PCIe round trip (device->host now, host->device on resume)
+    at the paper-measured effective bandwidth plus a fixed per-transfer
+    latency, so small victims favour recompute; recompute charges the
+    full re-prefill FLOPs (~2 * params per token) at device peak, so
+    long-context victims favour swap.  The crossover is where the
+    ``preempt_policy="auto"`` victim policy flips.
+    """
+    from repro.analysis.flops import param_count
+    bytes_ = n_pages * kv_page_bytes(cfg, page_size, dtype_bytes)
+    swap_s = 2 * (swap_latency_s + bytes_ / (model.pcie_gbps * 1e9))
+    recompute_s = (2 * param_count(cfg) * n_tokens
+                   / (model.device_tflops * 1e12))
+    return swap_s, recompute_s
+
+
 def table3_row(cfg: ModelConfig, seq_len: int, *, batch: int = 1,
                n_devices: int = 8,
                model: OffloadLatencyModel = OffloadLatencyModel(),

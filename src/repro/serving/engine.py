@@ -30,9 +30,10 @@ import numpy as np
 from repro.config import ModelConfig, ParallelConfig, ServeConfig
 from repro.core.fastattention import default_paged_impl
 from repro.core.offload import HostOffloadEngine, OffloadPlan, plan_offload
-from repro.serving.paged_cache import PagedKVCache
-from repro.serving.scheduler import (RUNNING, ContinuousBatchScheduler,
-                                     Request)
+from repro.serving.paged_cache import OutOfPages, PagedKVCache
+from repro.serving.pressure import PressureManager
+from repro.serving.scheduler import (PREFILLING, RUNNING,
+                                     ContinuousBatchScheduler, Request)
 
 
 def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
@@ -190,15 +191,20 @@ class ServeEngine:
         serve = self.serve
         mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
                            serve.max_batch, serve.max_pages_per_seq)
-        sched = ContinuousBatchScheduler(mgr, serve.max_batch)
-        # observability: benchmarks/tests read peak page usage + retire
-        # counts off the live objects after (or during) the stream
+        sched = ContinuousBatchScheduler(
+            mgr, serve.max_batch, admission=serve.admission,
+            watermark_pages=serve.watermark)
+        pressure = PressureManager(self.cfg, serve, mgr, sched)
+        # observability: benchmarks/tests read peak page usage, retire
+        # counts and preemption stats off the live objects after (or
+        # during) the stream
         self.last_cache, self.last_scheduler = mgr, sched
+        self.last_pressure = pressure
         # submit (and validate) eagerly, at the call site: the decode loop
         # is a generator and would otherwise defer errors to first next()
         for r in requests:
             sched.submit(r)
-        return self._stream(mgr, sched, key)
+        return self._stream(mgr, sched, pressure, key)
 
     def _first_token(self, req, slot, last_logits, next_tok, key):
         """Sample a freshly-prefilled sequence's first token and flip the
@@ -211,8 +217,47 @@ class ServeEngine:
         next_tok[slot] = tok
         return StreamEvent(req.id, tok, 0, req.done)
 
+    @staticmethod
+    def _grow(mgr: PagedKVCache, pressure: PressureManager, pools,
+              slot: int, n: int) -> None:
+        """``mgr.append(slot, n)`` with page-pressure relief: on
+        OutOfPages, evict the newest-admitted other sequence (swap or
+        recompute) and retry.  Terminates because submit-time validation
+        guarantees any single request fits the pool alone."""
+        while True:
+            try:
+                mgr.append(slot, n)
+                return
+            except OutOfPages:
+                pressure.relieve(pools, protect=slot)
+
+    @staticmethod
+    def _prefill_groups(jobs, width: int):
+        """Pack this step's prefill jobs into batched launches: first-fit
+        into the earliest group that has room and no job for the same
+        slot yet (a slot's chunk k+1 must launch after its chunk k; the
+        first-fit order preserves that).  Distinct sequences' chunks ride
+        one ``prefill_chunk_paged`` call instead of one launch each."""
+        groups: list = []
+        for job in jobs:
+            slot = job[0]
+            for g in groups:
+                if len(g) < width and all(j[0] != slot for j in g):
+                    g.append(job)
+                    break
+            else:
+                groups.append([job])
+        return groups
+
+    def _resume_decode(self, req, slot, next_tok) -> None:
+        """Flip a resumed sequence whose prefill state is fully restored
+        back into decode: its next input token was already sampled before
+        the preemption, so nothing is emitted here."""
+        req.state = RUNNING
+        next_tok[slot] = req.generated[-1]
+
     def _stream(self, mgr: PagedKVCache, sched: ContinuousBatchScheduler,
-                key: Optional[jax.Array]):
+                pressure: PressureManager, key: Optional[jax.Array]):
         serve = self.serve
         ps = mgr.page_size
         npages = mgr.num_pages
@@ -226,61 +271,119 @@ class ServeEngine:
         while sched.has_work:
             sched.retire()
             admitted = sched.admit()
+            # RESUMING path: swap-preempted requests re-admitted by the
+            # scheduler get their stashed KV copied back into the pages
+            # adopt_pages just materialised; a sequence that was decoding
+            # when evicted rejoins the decode batch directly (its next
+            # input token was sampled before the preemption).
+            for slot, req in admitted:
+                if pressure.holds(req.id):
+                    pools = pressure.restore(pools, slot, req)
+                if req.state == RUNNING:
+                    next_tok[slot] = req.generated[-1]
             if not admitted and not sched.running():
-                if not sched.waiting:
+                if not sched.waiting and not sched.resuming:
                     break               # everything retired
-                # submit-time validation + worst-case reservation make
-                # this unreachable today; kept as a cheap tripwire for
-                # future scheduler policies (preemption relaxes both)
-                req = sched.waiting[0]
+                # submit-time validation guarantees the head of either
+                # queue fits an empty pool (the watermark is waived when
+                # no slot is occupied); kept as a cheap tripwire
+                req = (sched.resuming or sched.waiting)[0]
                 raise RuntimeError(
                     f"pool too small for request {req.id}: needs "
                     f"{-(-req.target_len // ps)} pages, pool has "
                     f"{npages - 1}")
+            if serve.debug_invariants:
+                mgr.check_invariants()
 
             # ---- prefill phase -------------------------------------------
             if serve.prefill_mode == "scan":
-                # legacy: whole prompt at once, one token per scan step,
-                # retraced per prompt length (the equivalence oracle)
+                # legacy: the whole (re)prefill source at once, one token
+                # per scan step, retraced per length (equivalence oracle)
                 for slot, req in admitted:
-                    mgr.append(slot, len(req.prompt))
+                    if sched.slots[slot] is not req \
+                            or req.state != PREFILLING:
+                        continue        # preempted again, or swap-resumed
+                    toks = req.prefill_tokens
+                    self._grow(mgr, pressure, pools, slot, len(toks))
                     pools, last_logits = pre_scan(
-                        self.params, jnp.asarray(req.prompt[None]), pools,
+                        self.params, jnp.asarray(toks[None]), pools,
                         jnp.asarray(mgr.device_row(slot)))
-                    req.prefilled = len(req.prompt)
-                    key, sub = jax.random.split(key)
-                    yield self._first_token(req, slot, last_logits,
-                                            next_tok, sub)
-            else:
-                # chunked: fixed-size chunks through the full forward,
-                # budgeted per step so decode slots keep producing
-                buf = np.zeros((1, chunk), np.int32)
-                for slot, req, start, n in sched.prefill_schedule(budget,
-                                                                  chunk):
-                    mgr.append(slot, n)            # chunk's pages
-                    buf[:] = 0
-                    buf[0, :n] = req.prompt[start:start + n]
-                    pools, last_logits = pre_chunk(
-                        self.params, jnp.asarray(buf), pools,
-                        jnp.asarray(mgr.device_row(slot)),
-                        jnp.full((1,), start, jnp.int32),
-                        jnp.full((1,), n, jnp.int32))
-                    req.prefilled = start + n
-                    if req.prefill_done:
+                    req.prefilled = len(toks)
+                    if req.generated:
+                        self._resume_decode(req, slot, next_tok)
+                    else:
                         key, sub = jax.random.split(key)
                         yield self._first_token(req, slot, last_logits,
                                                 next_tok, sub)
+            else:
+                # chunked: fixed-size chunks through the full forward,
+                # budgeted per step so decode slots keep producing; jobs
+                # for distinct sequences batch into one launch, padded to
+                # the next power-of-two row count (a lone prefilling
+                # prompt stays a 1-row launch; traces stay bounded by
+                # log2(max_batch)+1 widths, never by prompt length)
+                width = serve.max_batch
+                for group in self._prefill_groups(
+                        sched.prefill_schedule(budget, chunk), width):
+                    live = []
+                    for slot, req, start, n in group:
+                        if sched.slots[slot] is not req \
+                                or req.state != PREFILLING:
+                            continue    # victim of an earlier _grow
+                        self._grow(mgr, pressure, pools, slot, n)
+                        live.append((slot, req, start, n))
+                    # _grow may have evicted an earlier group member
+                    live = [(s, r, st, n) for s, r, st, n in live
+                            if sched.slots[s] is r]
+                    if not live:
+                        continue
+                    bw = 1
+                    while bw < len(live):
+                        bw *= 2
+                    bw = min(bw, width)
+                    buf = np.zeros((bw, chunk), np.int32)
+                    table = np.full((bw, mgr.max_pages_per_seq),
+                                    mgr.SCRATCH, np.int32)
+                    pos0 = np.zeros((bw,), np.int32)
+                    nval = np.zeros((bw,), np.int32)
+                    for i, (slot, req, start, n) in enumerate(live):
+                        buf[i, :n] = req.prefill_tokens[start:start + n]
+                        table[i] = mgr.table[slot]
+                        pos0[i] = start
+                        nval[i] = n
+                    pools, last_logits = pre_chunk(
+                        self.params, jnp.asarray(buf), pools,
+                        jnp.asarray(table), jnp.asarray(pos0),
+                        jnp.asarray(nval))
+                    for i, (slot, req, start, n) in enumerate(live):
+                        req.prefilled = start + n
+                        if not req.prefill_done:
+                            continue
+                        if req.generated:   # recompute-resume finished
+                            self._resume_decode(req, slot, next_tok)
+                        else:
+                            key, sub = jax.random.split(key)
+                            yield self._first_token(
+                                req, slot, last_logits[i:i + 1],
+                                next_tok, sub)
 
             # ---- decode phase --------------------------------------------
-            running = [(s, r) for s, r in sched.decoding() if not r.done]
+            cand = [(s, r) for s, r in sched.decoding() if not r.done]
+            # materialise the page (maybe a fresh one) every running
+            # sequence's next token will be written to -- evicting other
+            # sequences under pressure -- THEN snapshot the table for the
+            # device step.
+            for slot, req in cand:
+                if sched.slots[slot] is not req:
+                    continue            # evicted by an earlier _grow
+                self._grow(mgr, pressure, pools, slot, 1)
+            running = [(s, r) for s, r in cand if sched.slots[s] is r]
+            if serve.debug_invariants:
+                mgr.check_invariants()
             if not running:
                 continue
-            # materialise the page (maybe a fresh one) every running
-            # sequence's next token will be written to, THEN snapshot the
-            # table for the device step.
             pos_np = np.zeros((serve.max_batch,), np.int32)
             for slot, _ in running:
-                mgr.append(slot, 1)
                 pos_np[slot] = mgr.seq_len(slot) - 1
             table = mgr.device_table()
             for slot, _ in sched.prefilling():

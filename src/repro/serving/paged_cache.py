@@ -105,9 +105,10 @@ class PagedKVCache:
         self._active[slot] = True
         self._lens[slot] = 0
 
-    def append(self, slot: int, n: int = 1) -> None:
+    def append(self, slot: int, n: int = 1) -> list:
         """Record ``n`` new tokens for ``slot``, allocating pages as the
-        sequence crosses page boundaries."""
+        sequence crosses page boundaries.  Returns the newly materialised
+        pages (empty when the tokens fit in the current tail page)."""
         if not self._active[slot]:
             raise ValueError(f"slot {slot} not active")
         new_len = int(self._lens[slot]) + n
@@ -119,12 +120,15 @@ class PagedKVCache:
         if need > len(self._free):
             raise OutOfPages(
                 f"slot {slot}: need {need} pages, {len(self._free)} free")
+        new_pages = []
         for _ in range(need):
             page = self._free.pop()
             self.table[slot, len(self._pages[slot])] = page
             self._pages[slot].append(page)
+            new_pages.append(page)
         self._lens[slot] = new_len
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
+        return new_pages
 
     def free(self, slot: int) -> None:
         """Retire a slot: return its pages to the free list and reset its
@@ -136,6 +140,45 @@ class PagedKVCache:
         self.table[slot, :] = self.SCRATCH
         self._lens[slot] = 0
         self._active[slot] = False
+
+    # -- preemption / swap (page-pressure subsystem) --------------------
+    def release_pages(self, slot: int) -> list:
+        """Preempt a slot: deactivate it and return its pages to the free
+        list.  Returns the page list it owned so the caller can account
+        for them -- any contents worth keeping (swap-out) must have been
+        copied off the device BEFORE this call, because the pages may be
+        reallocated to another sequence immediately."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} not active")
+        pages = list(self._pages[slot])
+        self.free(slot)
+        return pages
+
+    def adopt_pages(self, slot: int, n_tokens: int) -> list:
+        """Swap-in: activate an empty slot and materialise pages for
+        ``n_tokens`` in one shot.  Returns the new page list so the
+        caller can scatter host-stashed KV back into them.  On
+        OutOfPages the slot is left inactive (clean failure)."""
+        self.alloc(slot)
+        try:
+            self.append(slot, n_tokens)
+        except OutOfPages:
+            self.free(slot)
+            raise
+        return list(self._pages[slot])
+
+    @property
+    def usable_pages(self) -> int:
+        """Pages available to sequences (everything but scratch)."""
+        return self.num_pages - 1
+
+    @property
+    def peak_utilization(self) -> float:
+        """High-water mark as a fraction of the usable pool -- the number
+        the over-subscription bench reports (worst-case-reservation
+        admission keeps this well below 1; optimistic admission with
+        preemption should push it to ~1)."""
+        return self.peak_used_pages / max(1, self.usable_pages)
 
     # -- invariants (exercised by the property tests) -------------------
     def check_invariants(self) -> None:

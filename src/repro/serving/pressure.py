@@ -1,0 +1,224 @@
+"""Page-pressure manager: preemption with KV swap-to-host or recompute.
+
+The paper's §4.4 CPU-GPU cooperative strategy moves KV to the host when
+device memory runs out instead of refusing the request; this module is
+that idea applied to the paged serving engine.  Optimistic admission
+(``scheduler.admit``) no longer reserves worst-case pages, so
+``PagedKVCache.append`` can legitimately hit ``OutOfPages`` mid-step.
+The engine then calls ``PressureManager.relieve``, which evicts the
+newest-admitted sequence (``scheduler.preemption_victim``) and disposes
+of its materialised KV one of two ways:
+
+* **swap** -- the victim's page-table rows are gathered off the device
+  pools into a ``HostPagePool`` stash (device->host copy); on resume the
+  scheduler re-materialises pages (``adopt_pages``) and the engine
+  scatters the stash back.  The round trip is bit-exact, so greedy
+  tokens are identical to an unpressured run.
+* **recompute** -- nothing is copied; on resume the sequence re-prefills
+  ``prompt + generated[:-1]`` through the existing chunked paged prefill
+  (bit-identical KV by the PR 2 chunked==scan==decode equivalence).
+
+``preempt_policy="auto"`` chooses per victim with the PCIe/FLOPs cost
+model built on ``core/offload.py``'s paper-calibrated constants: swap
+pays a fixed transfer latency plus bytes over effective PCIe both ways,
+recompute pays ~2*params FLOPs per token -- so small victims recompute
+and long-context victims swap.
+
+All device data movement is eager host-side numpy/jnp between engine
+steps; the jitted decode/prefill functions never see any of this.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core.offload import OffloadLatencyModel, preempt_cost_model
+from repro.serving.paged_cache import OutOfPages, PagedKVCache
+from repro.serving.scheduler import (PREFILLING, ContinuousBatchScheduler,
+                                     Request)
+
+# Pool leaves are (..., num_pages, page_size, head_dim): plain per-layer
+# pools are 4-D (Hkv, P, ps, D), lax.scan-stacked segments are 5-D
+# (reps, Hkv, P, ps, D) -- the page axis is always third from the end.
+PAGE_AXIS_FROM_END = 3
+
+
+def gather_pages(pools, pages) -> dict:
+    """Device->host copy of the given physical pages from every pool
+    leaf.  Returns a pytree of numpy arrays shaped like the leaves with
+    the page axis narrowed to ``len(pages)``."""
+    idx = jnp.asarray(np.asarray(pages, np.int32))
+    return jax.tree.map(
+        lambda a: np.asarray(jnp.take(a, idx,
+                                      axis=a.ndim - PAGE_AXIS_FROM_END)),
+        pools)
+
+
+def _scatter_impl(pools, idx, host_data):
+    def put(a, h):
+        sl = (slice(None),) * (a.ndim - PAGE_AXIS_FROM_END) + (idx,)
+        return a.at[sl].set(h.astype(a.dtype))
+
+    return jax.tree.map(put, pools, host_data)
+
+
+# jitted with the pools donated so XLA updates the pages in place --
+# an eager .at[].set would materialise a full copy of every per-layer
+# pool (the whole KV budget) per restored victim.  Donation is skipped
+# on CPU where it is unsupported (and would only warn).
+_scatter_jit = jax.jit(
+    _scatter_impl,
+    donate_argnums=(0,) if jax.default_backend() != "cpu" else ())
+
+
+def scatter_pages(pools, pages, host_data):
+    """Host->device copy-back: write ``host_data`` (a ``gather_pages``
+    result) into the -- possibly different -- physical ``pages`` of every
+    pool leaf.  Same dtype both ways, so the swap round trip is exact.
+    Retraces once per distinct victim page count (bounded by
+    ``max_pages_per_seq``), not per restore."""
+    idx = jnp.asarray(np.asarray(pages, np.int32))
+    return _scatter_jit(pools, idx,
+                        jax.tree.map(jnp.asarray, host_data))
+
+
+def _nbytes(tree) -> int:
+    return sum(a.nbytes for a in jax.tree.leaves(tree))
+
+
+class HostPagePool:
+    """Host-side stash for swapped-out KV pages, keyed by request id.
+
+    ``capacity_pages == 0`` means unbounded (host RAM is the real bound,
+    cf. the paper's 768 GB host vs 8x16 GB devices)."""
+
+    def __init__(self, capacity_pages: int = 0):
+        self.capacity_pages = capacity_pages
+        self.used_pages = 0
+        self.peak_pages = 0
+        self._stash: dict = {}          # request id -> (host_tree, n_pages)
+
+    def has_room(self, n_pages: int) -> bool:
+        return (not self.capacity_pages
+                or self.used_pages + n_pages <= self.capacity_pages)
+
+    def put(self, request_id: int, host_data, n_pages: int) -> None:
+        if request_id in self._stash:
+            raise ValueError(f"request {request_id} already stashed")
+        if not self.has_room(n_pages):
+            raise OutOfPages(
+                f"host page pool full: {self.used_pages}+{n_pages} > "
+                f"{self.capacity_pages}")
+        self._stash[request_id] = (host_data, n_pages)
+        self.used_pages += n_pages
+        self.peak_pages = max(self.peak_pages, self.used_pages)
+
+    def pop(self, request_id: int):
+        host_data, n_pages = self._stash.pop(request_id)
+        self.used_pages -= n_pages
+        return host_data
+
+    def __contains__(self, request_id: int) -> bool:
+        return request_id in self._stash
+
+    def __len__(self) -> int:
+        return len(self._stash)
+
+
+class PressureManager:
+    """Relieves ``OutOfPages`` by evicting sequences, and restores them
+    on re-admission.  Owns the host page pool, the swap/recompute policy
+    and the pressure statistics the bench reports."""
+
+    def __init__(self, cfg: ModelConfig, serve: ServeConfig,
+                 cache: PagedKVCache, sched: ContinuousBatchScheduler, *,
+                 latency_model: Optional[OffloadLatencyModel] = None,
+                 swap_latency_s: float = 5e-4):
+        if serve.preempt_policy not in ("swap", "recompute", "auto"):
+            raise ValueError(
+                f"unknown preempt_policy {serve.preempt_policy!r}")
+        self.cfg = cfg
+        self.cache = cache
+        self.sched = sched
+        self.policy = serve.preempt_policy
+        self.host_pool = HostPagePool(serve.host_pool_pages)
+        self.lat = latency_model or OffloadLatencyModel()
+        self.swap_latency_s = swap_latency_s
+        self.dtype_bytes = jnp.dtype(cfg.dtype).itemsize
+        self.stats = {"preemptions": 0, "swaps": 0, "recomputes": 0,
+                      "swap_bytes_out": 0, "swap_bytes_in": 0}
+
+    # -- policy ----------------------------------------------------------
+    def choose_policy(self, n_pages: int, n_tokens: int) -> str:
+        """Swap vs recompute for a victim with ``n_pages`` materialised
+        pages / ``n_tokens`` tokens (before the host-pool room check)."""
+        if n_tokens == 0 or self.policy == "recompute":
+            return "recompute"
+        if self.policy == "swap":
+            return "swap"
+        swap_s, rec_s = preempt_cost_model(
+            self.cfg, n_pages=n_pages, n_tokens=n_tokens,
+            page_size=self.cache.page_size, model=self.lat,
+            dtype_bytes=self.dtype_bytes,
+            swap_latency_s=self.swap_latency_s)
+        return "swap" if swap_s < rec_s else "recompute"
+
+    # -- evict -----------------------------------------------------------
+    def relieve(self, pools, protect: Optional[int] = None) -> Request:
+        """Evict the newest-admitted sequence other than ``protect``.
+        Raises OutOfPages when nothing is preemptible (cannot happen for
+        pool-validated requests: the protected slot alone always fits)."""
+        victim = self.sched.preemption_victim(protect)
+        if victim is None:
+            raise OutOfPages(
+                "page pressure with no preemptible sequence -- pool too "
+                "small for a single request (submit-time validation "
+                "should have rejected it)")
+        return self.preempt_slot(pools, victim)
+
+    def preempt_slot(self, pools, slot: int) -> Request:
+        """Evict a specific slot: decide swap/recompute, copy KV off the
+        device if swapping, then hand the slot back to the scheduler."""
+        req = self.sched.slots[slot]
+        # KV actually written to the pools: a PREFILLING victim has its
+        # completed chunks; a decoding victim has prompt + all generated
+        # tokens but the last (whose KV its next decode step writes).
+        written = req.prefilled if req.state == PREFILLING \
+            else req.prefill_total
+        ps = self.cache.page_size
+        n_pages = -(-written // ps)
+        kind = self.choose_policy(n_pages, written)
+        if kind == "swap" and not self.host_pool.has_room(n_pages):
+            kind = "recompute"
+        if kind == "swap":
+            pages = self.cache.owned_pages(slot)[:n_pages]
+            host_data = gather_pages(pools, pages)
+            self.host_pool.put(req.id, host_data, n_pages)
+            self.stats["swaps"] += 1
+            self.stats["swap_bytes_out"] += _nbytes(host_data)
+        else:
+            self.stats["recomputes"] += 1
+        req.resume_kind = kind
+        req.resume_len = written
+        self.sched.preempt(slot)
+        self.stats["preemptions"] += 1
+        return req
+
+    # -- restore ---------------------------------------------------------
+    def holds(self, request_id: int) -> bool:
+        return request_id in self.host_pool
+
+    def restore(self, pools, slot: int, req: Request):
+        """Copy a swap-resumed request's stashed KV back into the pages
+        ``adopt_pages`` just materialised for it.  Returns new pools."""
+        host_data = self.host_pool.pop(req.id)
+        n_pages = -(-req.resume_len // self.cache.page_size)
+        pages = self.cache.owned_pages(slot)[:n_pages]
+        assert len(pages) == n_pages, (slot, pages, n_pages)
+        self.stats["swap_bytes_in"] += _nbytes(host_data)
+        req.resume_kind = None
+        return scatter_pages(pools, pages, host_data)

@@ -6,19 +6,27 @@ sequences retire individually the moment they finish, their pages go back
 to the free list, and the freed slot admits the next waiting request.
 The whole batch never waits for its slowest member.
 
-Admission is *worst-case reserved*: a request is admitted only if the pool
-can still hold its full prompt + max_new_tokens after honouring the
-worst-case growth of everything already running.  Pages themselves are
-allocated lazily (``PagedKVCache.append``), so short-finishing sequences
-return their slack early -- the reservation only gates admission, it never
-pins physical pages.  This makes the engine deadlock-free without
-preemption; preemption/swap is the ROADMAP follow-up that relaxes it.
+Admission is *optimistic* by default: a request is admitted as soon as
+its prompt fits beside a small ``watermark_pages`` reserve -- worst-case
+decode growth is NOT reserved up front (a slot that will generate 10
+tokens no longer pins pages for ``max_new_tokens``).  When the pool does
+run dry mid-step, the page-pressure subsystem (``serving/pressure.py``)
+preempts the newest-admitted sequence(s): their pages are released and
+their KV is either swapped to a host page pool or recomputed on resume.
+Preempted requests wait in a ``resuming`` queue that ``admit`` serves
+ahead of fresh arrivals, oldest arrival first (FIFO fairness).  The PR 1
+worst-case-reservation policy survives as ``admission="reserved"`` --
+deadlock-free without preemption, but chronically under-subscribed; the
+over-subscription bench reports both.
 
 Prefill is a first-class scheduler state (Sarathi-style chunked prefill):
 an admitted request is PREFILLING until its whole prompt has been pushed
 through the model in ``prefill_chunk``-token chunks; ``prefill_schedule``
 plans each engine step's chunk work under a token budget so a long
 newcomer prompt never stalls the decode latency of running sequences.
+After a preemption the prefill source is the prompt *plus* every already
+generated token except the last (``Request.prefill_tokens``), so a
+recompute-resumed sequence rebuilds exactly the KV it lost.
 """
 from __future__ import annotations
 
@@ -30,8 +38,8 @@ import numpy as np
 
 from repro.serving.paged_cache import PagedKVCache, pages_needed
 
-WAITING, PREFILLING, RUNNING, FINISHED = (
-    "WAITING", "PREFILLING", "RUNNING", "FINISHED")
+WAITING, PREFILLING, RUNNING, PREEMPTED, FINISHED = (
+    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED")
 
 
 @dataclass
@@ -44,7 +52,12 @@ class Request:
     state: str = WAITING
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
-    prefilled: int = 0                 # prompt tokens already in the cache
+    prefilled: int = 0                 # prefill tokens already in the cache
+    # -- page-pressure bookkeeping -------------------------------------
+    arrival: int = -1                  # submit order (scheduler-assigned)
+    resume_kind: Optional[str] = None  # "swap" | "recompute" after preempt
+    resume_len: int = 0                # materialised KV tokens at preempt
+    preemptions: int = 0               # times this request was evicted
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -61,8 +74,25 @@ class Request:
         return len(self.prompt) + self.max_new_tokens
 
     @property
+    def prefill_tokens(self) -> np.ndarray:
+        """Token source for (re)prefill: the prompt, plus -- after a
+        preemption of a decoding sequence -- every generated token except
+        the last, whose KV is rebuilt by its own next decode step."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated[:-1], np.int32)])
+
+    @property
+    def prefill_total(self) -> int:
+        """Tokens (re)prefill must materialise before decode resumes.
+        Only meaningful while PREFILLING/PREEMPTED -- for a sequence that
+        is decoding it grows with ``generated`` and must not be read."""
+        return len(self.prompt) + max(0, len(self.generated) - 1)
+
+    @property
     def prefill_done(self) -> bool:
-        return self.prefilled >= len(self.prompt)
+        return self.prefilled >= self.prefill_total
 
     @property
     def done(self) -> bool:
@@ -72,19 +102,27 @@ class Request:
 
 
 class ContinuousBatchScheduler:
-    """Admits waiting requests into free decode slots, schedules chunked
-    prefill under a token budget, retires finished sequences, and
-    reclaims their pages."""
+    """Admits waiting/resuming requests into free decode slots, schedules
+    chunked prefill under a token budget, retires finished sequences,
+    reclaims their pages, and picks preemption victims under pressure."""
 
-    def __init__(self, cache: PagedKVCache, max_slots: Optional[int] = None):
+    def __init__(self, cache: PagedKVCache, max_slots: Optional[int] = None,
+                 *, admission: str = "optimistic", watermark_pages: int = 1):
+        if admission not in ("optimistic", "reserved"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.cache = cache
         self.max_slots = max_slots or cache.max_slots
         assert self.max_slots <= cache.max_slots
+        self.admission = admission
+        self.watermark_pages = watermark_pages
         self.waiting: deque = deque()
+        self.resuming: deque = deque()      # preempted, FIFO by arrival
         self.slots: List[Optional[Request]] = [None] * self.max_slots
         self.finished: List[Request] = []
+        self.preempt_count = 0
         self._admit_seq = 0
         self._admitted_at: dict = {}        # id -> admission sequence no.
+        self._arrival_seq = 0
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -100,11 +138,14 @@ class ContinuousBatchScheduler:
             raise ValueError(
                 f"request {req.id}: needs {worst} pages, pool has "
                 f"{self.cache.num_pages - 1}")
+        req.arrival = self._arrival_seq
+        self._arrival_seq += 1
         self.waiting.append(req)
 
     # -- step phases -----------------------------------------------------
     def _reserved_pages(self) -> int:
-        """Worst-case future page demand of everything running."""
+        """Worst-case future page demand of everything running (only the
+        ``admission="reserved"`` baseline gates on this)."""
         return sum(
             pages_needed(self.cache.seq_len(req.slot), req.target_len,
                          self.cache.page_size)
@@ -124,31 +165,101 @@ class ContinuousBatchScheduler:
                 retired.append(req)
         return retired
 
+    def _admission_need(self, req: Request, resumed: bool) -> int:
+        """Pages admission must see available.  Optimistic: what the
+        (re)prefill will materialise -- decode growth is preemption's
+        problem.  Reserved: the full worst case."""
+        if self.admission == "reserved":
+            return pages_needed(0, req.target_len, self.cache.page_size)
+        n = req.resume_len if (resumed and req.resume_kind == "swap") \
+            else req.prefill_total
+        return pages_needed(0, n, self.cache.page_size)
+
     def admit(self) -> List[Tuple[int, Request]]:
-        """Fill free slots from the waiting queue (FIFO, no skipping: a
-        large head-of-line request blocks rather than starves).  Admitted
-        requests enter PREFILLING; the engine flips them to RUNNING once
-        their whole prompt is in the cache."""
-        admitted = []
-        reserved = self._reserved_pages()
+        """Fill free slots, resuming queue first (a preempted request
+        goes ahead of every fresh arrival), then waiting -- both FIFO, no
+        skipping: a large head-of-line request blocks rather than
+        starves.  Fresh and recompute-resumed requests enter PREFILLING;
+        a swap-resumed request gets its pages re-materialised here
+        (``adopt_pages``) and rejoins in its pre-preemption state once
+        the engine copies its host KV back."""
+        admitted: List[Tuple[int, Request]] = []
+        promised = 0                 # pages admitted but not yet allocated
+        # snapshot BEFORE admitting: requests admitted this round land in
+        # self.slots and would otherwise be counted again via promised
+        reserved0 = (self._reserved_pages()
+                     if self.admission == "reserved" else 0)
         for slot in range(self.max_slots):
-            if self.slots[slot] is not None or not self.waiting:
+            if self.slots[slot] is not None:
                 continue
-            req = self.waiting[0]
-            worst = pages_needed(0, req.target_len, self.cache.page_size)
-            if worst > self.cache.free_pages - reserved:
+            if self.resuming:
+                req, resumed = self.resuming[0], True
+            elif self.waiting:
+                req, resumed = self.waiting[0], False
+            else:
                 break
-            self.waiting.popleft()
-            self.cache.alloc(slot)
-            req.state = PREFILLING
-            req.prefilled = 0
+            need = self._admission_need(req, resumed)
+            if self.admission == "reserved":
+                headroom = self.cache.free_pages - reserved0 - promised
+            else:
+                # watermark reserve -- waived while the grid is empty so
+                # a lone request can always make progress
+                occupied = promised or admitted or any(
+                    r is not None for r in self.slots)
+                water = self.watermark_pages if occupied else 0
+                headroom = self.cache.free_pages - promised - water
+            if need > headroom:
+                break
+            (self.resuming if resumed else self.waiting).popleft()
+            if resumed and req.resume_kind == "swap" and req.resume_len:
+                # swap-in: materialise the pages now; the engine scatters
+                # the host-stashed KV into them right after admit()
+                self.cache.adopt_pages(slot, req.resume_len)
+                req.prefilled = req.resume_len
+                req.state = RUNNING if (req.generated and req.prefill_done) \
+                    else PREFILLING
+            else:
+                self.cache.alloc(slot)
+                req.prefilled = 0
+                req.state = PREFILLING
+                promised += need
             req.slot = slot
             self.slots[slot] = req
             self._admitted_at[req.id] = self._admit_seq
             self._admit_seq += 1
-            reserved += worst
             admitted.append((slot, req))
         return admitted
+
+    # -- preemption (page pressure) --------------------------------------
+    def preemption_victim(self, protect: Optional[int] = None
+                          ) -> Optional[int]:
+        """Newest-admitted occupied slot, excluding ``protect`` (the slot
+        whose growth triggered the pressure).  Newest-first keeps the
+        oldest sequence always progressing -- the liveness argument."""
+        cands = [(self._admitted_at[r.id], s)
+                 for s, r in enumerate(self.slots)
+                 if r is not None and s != protect]
+        return max(cands)[1] if cands else None
+
+    def preempt(self, slot: int) -> Request:
+        """Evict the sequence in ``slot``: release its pages and park it
+        on the resuming queue (kept sorted by arrival so the earliest
+        submitted victim resumes first).  The caller (PressureManager)
+        must have copied any KV worth keeping off the device and set
+        ``resume_kind``/``resume_len`` BEFORE this call."""
+        req = self.slots[slot]
+        if req is None or req.state not in (PREFILLING, RUNNING):
+            raise ValueError(f"slot {slot} not preemptible")
+        self.cache.release_pages(slot)
+        req.state = PREEMPTED
+        req.slot = None
+        req.preemptions += 1
+        self.slots[slot] = None
+        self._admitted_at.pop(req.id, None)
+        idx = sum(1 for r in self.resuming if r.arrival < req.arrival)
+        self.resuming.insert(idx, req)
+        self.preempt_count += 1
+        return req
 
     def prefill_schedule(self, budget: int,
                          chunk: int) -> List[Tuple[int, Request, int, int]]:
@@ -165,10 +276,11 @@ class ContinuousBatchScheduler:
         spent = 0
         for slot, req in self.prefilling():
             start = req.prefilled
-            while start < len(req.prompt):
+            total = req.prefill_total
+            while start < total:
                 if jobs and spent >= budget:
                     return jobs
-                n = min(chunk, len(req.prompt) - start)
+                n = min(chunk, total - start)
                 jobs.append((slot, req, start, n))
                 start += n
                 spent += n
@@ -193,5 +305,5 @@ class ContinuousBatchScheduler:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting) or any(
-            r is not None for r in self.slots)
+        return (bool(self.waiting) or bool(self.resuming)
+                or any(r is not None for r in self.slots))

@@ -76,16 +76,22 @@ def test_chunked_matches_scan_odd_chunk_and_budget(engine_factory):
 
 
 def test_trace_count_independent_of_prompt_length(engine_factory):
-    """The jitted chunk function must trace exactly once no matter how
-    many distinct prompt lengths stream through (the scan path retraces
-    per length -- the compile-time cost the chunked path removes)."""
+    """The jitted chunk function must trace a bounded number of times --
+    one per power-of-two launch width up to max_batch (here 2), NEVER
+    per prompt length (the scan path retraces per length -- the
+    compile-time cost the chunked path removes)."""
     engine, cfg = engine_factory(ServeConfig(
         max_batch=2, max_seq_len=96, top_k=1, page_size=16,
         prefill_chunk=16))
     engine.prefill_trace_count = 0
     engine._paged_fn_cache.clear()
-    _run(engine, cfg, [(5, 2), (23, 2), (37, 2), (64, 2), (41, 2)])
-    assert engine.prefill_trace_count == 1
+    spec = [(5, 2), (23, 2), (37, 2), (64, 2), (41, 2)]
+    _run(engine, cfg, spec)
+    assert engine.prefill_trace_count <= 2          # widths 1 and 2
+    # streaming MORE distinct prompt lengths adds no traces
+    traced = engine.prefill_trace_count
+    _run(engine, cfg, [(7, 2), (29, 2), (53, 2), (61, 2)], seed=5)
+    assert engine.prefill_trace_count == traced
 
 
 def test_chunked_prefill_kernel_impl_matches_reference(engine_factory):

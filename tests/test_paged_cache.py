@@ -73,6 +73,37 @@ def test_out_of_pages_and_per_seq_cap():
         c2.append(0, 5)                         # > max_pages_per_seq
 
 
+def test_release_and_adopt_pages():
+    """Preemption primitives: release returns the exact owned pages to
+    the free list; adopt re-materialises a swapped length in one shot."""
+    c = PagedKVCache(num_pages=8, page_size=4, max_slots=2,
+                     max_pages_per_seq=4)
+    c.alloc(0)
+    new = c.append(0, 10)
+    assert new == c.owned_pages(0) and len(new) == 3
+    assert c.append(0, 1) == []                  # fits the tail page
+    pages = c.release_pages(0)
+    assert pages == new
+    assert not c.is_active(0) and c.free_pages == 7 and c.seq_len(0) == 0
+    c.check_invariants()
+
+    got = c.adopt_pages(0, 9)
+    assert len(got) == 3 and c.seq_len(0) == 9
+    assert got == c.owned_pages(0)
+    c.check_invariants()
+
+    # failed adopt leaves the slot inactive and the pool untouched
+    with pytest.raises(OutOfPages):
+        c.adopt_pages(1, 100)
+    assert not c.is_active(1)
+    c.check_invariants()
+    with pytest.raises(ValueError):
+        c.release_pages(1)                       # inactive slot
+
+    assert c.usable_pages == 7
+    assert c.peak_utilization == pytest.approx(3 / 7)
+
+
 def test_mapping_roundtrip_random_lengths():
     rng = np.random.default_rng(0)
     c = PagedKVCache(num_pages=40, page_size=8, max_slots=4,
@@ -101,13 +132,17 @@ def test_random_trace_no_leak_no_double_own(seed):
     c = PagedKVCache(num_pages=24, page_size=4, max_slots=6,
                      max_pages_per_seq=6)
     for _ in range(300):
-        op = rng.choice(["alloc", "append", "free"])
+        op = rng.choice(["alloc", "append", "free", "release", "adopt"])
         slot = int(rng.integers(0, c.max_slots))
         try:
             if op == "alloc":
                 c.alloc(slot)
             elif op == "append":
                 c.append(slot, int(rng.integers(1, 6)))
+            elif op == "release":
+                c.release_pages(slot)
+            elif op == "adopt":
+                c.adopt_pages(slot, int(rng.integers(1, 12)))
             else:
                 c.free(slot)
         except (ValueError, OutOfPages):

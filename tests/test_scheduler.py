@@ -52,11 +52,13 @@ def test_admit_fifo_and_slot_assignment():
     assert [(s, r.id) for s, r in admitted] == [(0, 2)]
 
 
-def test_admission_respects_worst_case_reservation():
+def test_reserved_admission_respects_worst_case():
+    """The PR 1 baseline policy (admission="reserved") still gates on
+    prompt + max_new_tokens worst case."""
     # 7 usable pages of 4 tokens; each request worst-cases 4 pages
     cache = PagedKVCache(num_pages=8, page_size=4, max_slots=4,
                          max_pages_per_seq=4)
-    sched = ContinuousBatchScheduler(cache)
+    sched = ContinuousBatchScheduler(cache, admission="reserved")
     for i in range(3):
         sched.submit(_req(i, 8, 8))              # target_len 16 = 4 pages
     admitted = sched.admit()
@@ -66,8 +68,48 @@ def test_admission_respects_worst_case_reservation():
     assert cache.used_pages == 0
     r0 = admitted[0][1]
     r0.generated = list(range(8))
+    cache.check_invariants()
     sched.retire()
     assert [r.id for _, r in sched.admit()] == [1]
+    cache.check_invariants()
+
+    # same-round admissions must not be double-counted (once via the
+    # live slot, once via the promised pages): 8 usable pages fit two
+    # 4-page reservations in ONE admit() call
+    cache2 = PagedKVCache(num_pages=9, page_size=4, max_slots=4,
+                          max_pages_per_seq=4)
+    sched2 = ContinuousBatchScheduler(cache2, admission="reserved")
+    for i in range(3):
+        sched2.submit(_req(i, 8, 8))
+    assert [r.id for _, r in sched2.admit()] == [0, 1]
+
+
+def test_optimistic_admission_gates_on_prompt_and_watermark():
+    """Optimistic admission ignores max_new_tokens: a request enters as
+    soon as its *prompt* pages fit beside the watermark reserve."""
+    cache = PagedKVCache(num_pages=8, page_size=4, max_slots=4,
+                         max_pages_per_seq=4)
+    sched = ContinuousBatchScheduler(cache, admission="optimistic",
+                                     watermark_pages=1)
+    for i in range(4):
+        sched.submit(_req(i, 8, 8))              # prompt 8 = 2 pages each
+    admitted = sched.admit()
+    # worst case would admit one; prompts of three fit: 3*2 = 6 <= 7-1
+    assert [r.id for _, r in admitted] == [0, 1, 2]
+    assert cache.used_pages == 0                 # still lazily allocated
+    cache.check_invariants()
+
+    # watermark: with 2 free pages beyond promised, a fourth 2-page
+    # prompt would leave less than the 1-page reserve... it fits exactly
+    # at the boundary check: 6 promised + 2 = 8 > 7 - 1, so it waits
+    assert sched.slots[3] is None
+    # ...but a watermark is waived when the grid is empty (progress)
+    cache2 = PagedKVCache(num_pages=4, page_size=4, max_slots=2,
+                          max_pages_per_seq=4)
+    sched2 = ContinuousBatchScheduler(cache2, admission="optimistic",
+                                      watermark_pages=3)
+    sched2.submit(_req(9, 8, 4))                 # 2-page prompt, 3 usable
+    assert [r.id for _, r in sched2.admit()] == [9]
 
 
 def test_oversized_request_rejected_at_submit():
