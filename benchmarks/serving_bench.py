@@ -23,6 +23,12 @@ regress against):
   swap bytes and the pool high-water-mark: reservation leaves the pool
   under-subscribed, pressure-managed admission drives it to ~100% with
   zero caller-visible failures.
+* **prefix_sharing** -- N requests share a long system prompt.  A cold
+  engine (no prefix cache) prefills every prompt from token 0; a warm
+  engine (``prefix_cache=True``, radix index seeded by a first run)
+  shares the cached system-prompt pages copy-on-write and computes only
+  each request's unique tail.  Reports prefill tokens computed, TTFT
+  and pages resident both ways; greedy tokens must be bit-identical.
 
     PYTHONPATH=src python -m benchmarks.serving_bench \
         [--arch gemma2-2b] [--requests 12] [--prefill-len 512]
@@ -286,6 +292,86 @@ def oversubscribe(arch: str = "gemma2-2b", n_requests: int = 8,
     return out
 
 
+def prefix_sharing(arch: str = "gemma2-2b", n_requests: int = 6,
+                   system_len: int = 96, unique_len: int = 12,
+                   max_batch: int = 3, page_size: int = 0,
+                   max_new: int = 4, seed: int = 0, smoke: bool = True,
+                   built=None) -> dict:
+    """Shared-system-prompt workload, cold (no prefix cache) vs warm
+    (radix index seeded by a prior run on the same engine)."""
+    page_size = page_size or (
+        128 if jax.default_backend() == "tpu" else 16)
+    system_len = max(system_len, 2 * page_size)
+    cfg, model, params = built or _build(arch, smoke)
+    max_seq_len = system_len + unique_len + max_new + page_size
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=system_len)
+
+    def make_requests(run_seed):
+        r = np.random.default_rng(run_seed)
+        return [Request(id=i, prompt=np.concatenate(
+            [sys_prompt, r.integers(0, cfg.vocab_size, size=unique_len)]),
+            max_new_tokens=max_new) for i in range(n_requests)]
+
+    def serve_cfg(prefix):
+        return ServeConfig(max_batch=max_batch, max_seq_len=max_seq_len,
+                           top_k=1, page_size=page_size,
+                           prefix_cache=prefix)
+
+    def timed_run(engine, reqs):
+        failures, error, events, ttft = 0, None, [], {}
+        t0 = time.perf_counter()
+        try:
+            for ev in engine.generate_stream(reqs):
+                if ev.index == 0:
+                    ttft[ev.request_id] = time.perf_counter() - t0
+                events.append(ev)
+        except Exception as e:
+            failures, error = 1, repr(e)
+        dt = time.perf_counter() - t0
+        computed = sum(len(r.prompt) - r.matched_len for r in reqs)
+        mgr = engine.last_cache
+        return {
+            "completed": sum(1 for r in reqs if r.state == "FINISHED"),
+            "caller_failures": failures,
+            "error": error,
+            "wall_s": round(dt, 3),
+            "ttft_mean_s": round(float(np.mean(list(ttft.values()))), 4)
+            if ttft else None,
+            "prompt_tokens": int(sum(len(r.prompt) for r in reqs)),
+            "prefill_tokens_computed": int(computed),
+            "matched_tokens": int(sum(r.matched_len for r in reqs)),
+            "pages_resident": mgr.used_pages,
+        }, [r.generated for r in reqs]
+
+    shared_aligned = (system_len // page_size) * page_size
+    out = {
+        "requests": n_requests,
+        "system_prompt_tokens": system_len,
+        "unique_tokens": unique_len,
+        "shared_aligned_tokens": shared_aligned,
+        # the fraction of prefill work the cache should at least save
+        "shared_prefix_fraction": round(
+            shared_aligned / (system_len + unique_len), 3),
+    }
+
+    # cold: no prefix cache, every prompt prefills from token 0
+    cold = ServeEngine(model=model, params=params, cfg=cfg,
+                       serve=serve_cfg(False))
+    _warm(cold, cfg, cold.serve, np.random.default_rng(seed + 1))
+    out["cold"], cold_tokens = timed_run(cold, make_requests(seed + 2))
+
+    # warm: same engine config with the radix index, seeded by one run
+    eng = ServeEngine(model=model, params=params, cfg=cfg,
+                      serve=serve_cfg(True))
+    _warm(eng, cfg, eng.serve, np.random.default_rng(seed + 1))
+    out["seed_run"], _ = timed_run(eng, make_requests(seed + 3))
+    out["warm"], warm_tokens = timed_run(eng, make_requests(seed + 2))
+    out["cached_pages"] = eng.last_prefix.cached_pages
+    out["tokens_bit_identical"] = bool(warm_tokens == cold_tokens)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma2-2b")
@@ -308,6 +394,11 @@ def main():
     ap.add_argument("--skip-oversub", action="store_true",
                     help="skip the over-subscription section")
     ap.add_argument("--oversub-requests", type=int, default=8)
+    ap.add_argument("--skip-prefix", action="store_true",
+                    help="skip the prefix-sharing section")
+    ap.add_argument("--prefix-requests", type=int, default=6)
+    ap.add_argument("--system-len", type=int, default=96,
+                    help="shared system-prompt length (prefix section)")
     ap.add_argument("--preempt-policy", default="swap",
                     choices=["auto", "swap", "recompute"])
     ap.add_argument("--json-out", default=os.path.join(
@@ -343,6 +434,13 @@ def main():
             page_size=args.page_size, pool_frac=args.pool_frac,
             preempt_policy=args.preempt_policy, seed=args.seed,
             smoke=not args.full)
+    if not args.skip_prefix:
+        # shared system prompt, cold vs warm: the radix prefix cache
+        # must cut warm prefill work by >= the shared-prefix fraction
+        report["prefix_sharing"] = prefix_sharing(
+            arch=args.arch, n_requests=args.prefix_requests,
+            system_len=args.system_len, page_size=args.page_size,
+            seed=args.seed, smoke=not args.full)
 
     def flat(prefix, d):
         for k, v in d.items():

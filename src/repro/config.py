@@ -283,6 +283,21 @@ class ServeConfig:
     # Run PagedKVCache.check_invariants every engine step (debug/tests).
     debug_invariants: bool = False
 
+    # --- prefix cache: cross-request KV reuse ---------------------------
+    # Radix-tree prefix cache (serving/prefix_cache.py): retiring
+    # sequences publish their page-aligned prefix blocks; a new request
+    # shares the longest matching cached page run copy-on-write and
+    # skips recomputing it (chunked prefill starts at matched_len).  The
+    # paged state (page manager, index, device pools) then persists
+    # across generate_stream calls on the same engine.  Greedy outputs
+    # stay bit-identical to a cold run -- shared pages hold exactly the
+    # KV the prefix would recompute.
+    prefix_cache: bool = False
+    # Cap on pages the index may keep resident (LRU leaf eviction);
+    # 0 = unbounded -- the pool itself is the bound, with leaves
+    # reclaimed whenever the free list runs low.
+    prefix_cache_pages: int = 0
+
     @property
     def watermark(self) -> int:
         return self.watermark_pages or max(1, self.max_batch // 2)

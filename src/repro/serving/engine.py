@@ -31,7 +31,8 @@ from repro.config import ModelConfig, ParallelConfig, ServeConfig
 from repro.core.fastattention import default_paged_impl
 from repro.core.offload import HostOffloadEngine, OffloadPlan, plan_offload
 from repro.serving.paged_cache import OutOfPages, PagedKVCache
-from repro.serving.pressure import PressureManager
+from repro.serving.prefix_cache import RadixPrefixIndex
+from repro.serving.pressure import PressureManager, copy_pages
 from repro.serving.scheduler import (PREFILLING, RUNNING,
                                      ContinuousBatchScheduler, Request)
 
@@ -67,6 +68,11 @@ class ServeEngine:
     offload: Optional[HostOffloadEngine] = None
     # jitted paged prefill/decode triples keyed by resolved paged impl
     _paged_fn_cache: dict = field(default_factory=dict, repr=False)
+    # paged state persisted across generate_stream calls when the prefix
+    # cache is on: [PagedKVCache, RadixPrefixIndex, device pools] -- the
+    # index's pages (and their contents) must outlive any single stream
+    # for cross-request KV reuse to exist
+    _shared_state: Optional[list] = field(default=None, repr=False)
 
     def __post_init__(self):
         self._decode = jax.jit(
@@ -76,6 +82,9 @@ class ServeEngine:
         # called): the trace-count test asserts it stays at 1 no matter
         # how many prompt lengths stream through
         self.prefill_trace_count = 0
+        # prefill chunk *launches* (calls, not traces): prefix-cache hits
+        # skip the matched prefix's launches entirely, asserted in tests
+        self.prefill_launches = 0
 
     # ------------------------------------------------------------------
     def prefill(self, tokens: jax.Array):
@@ -143,13 +152,15 @@ class ServeEngine:
                 return model.decode_step_paged(params, tok, pools, table,
                                                pos, impl=impl)
 
-            def pre_scan(params, prompt, pools, table_row):
+            def pre_scan(params, prompt, pools, table_row, pos0):
+                # pos0: (1,) int32 runtime offset -- a prefix-cache hit
+                # scans only the uncached prompt tail from matched_len
                 s = prompt.shape[1]
 
                 def step(c, t):
                     lg, c = model.decode_step_paged(
                         params, prompt[:, t], c, table_row,
-                        jnp.full((1,), t, jnp.int32), impl=impl)
+                        pos0 + t.astype(jnp.int32), impl=impl)
                     return c, lg
 
                 pools, lgs = jax.lax.scan(step, pools, jnp.arange(s))
@@ -189,17 +200,30 @@ class ServeEngine:
         scratch page and are ignored.
         """
         serve = self.serve
-        mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
-                           serve.max_batch, serve.max_pages_per_seq)
+        if serve.prefix_cache:
+            # cross-request KV reuse: cache manager, radix index and the
+            # device pools all persist across generate_stream calls
+            if self._shared_state is None:
+                mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
+                                   serve.max_batch, serve.max_pages_per_seq)
+                prefix = RadixPrefixIndex(
+                    mgr, serve.page_size, serve.prefix_cache_pages)
+                self._shared_state = [mgr, prefix, None]
+            mgr, prefix = self._shared_state[0], self._shared_state[1]
+        else:
+            mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
+                               serve.max_batch, serve.max_pages_per_seq)
+            prefix = None
         sched = ContinuousBatchScheduler(
             mgr, serve.max_batch, admission=serve.admission,
-            watermark_pages=serve.watermark)
-        pressure = PressureManager(self.cfg, serve, mgr, sched)
+            watermark_pages=serve.watermark, prefix_cache=prefix)
+        pressure = PressureManager(self.cfg, serve, mgr, sched,
+                                   prefix_cache=prefix)
         # observability: benchmarks/tests read peak page usage, retire
         # counts and preemption stats off the live objects after (or
         # during) the stream
         self.last_cache, self.last_scheduler = mgr, sched
-        self.last_pressure = pressure
+        self.last_pressure, self.last_prefix = pressure, prefix
         # submit (and validate) eagerly, at the call site: the decode loop
         # is a generator and would otherwise defer errors to first next()
         for r in requests:
@@ -218,16 +242,28 @@ class ServeEngine:
         return StreamEvent(req.id, tok, 0, req.done)
 
     @staticmethod
-    def _grow(mgr: PagedKVCache, pressure: PressureManager, pools,
-              slot: int, n: int) -> None:
+    def _apply_cow(mgr: PagedKVCache, pools):
+        """Replay pending copy-on-write page moves on the device pools:
+        the host manager already rewired the page table, the contents
+        must follow before the next launch reads or writes the copy."""
+        if not mgr.cow_pending:
+            return pools
+        pairs, mgr.cow_pending = mgr.cow_pending, []
+        return copy_pages(pools, [s for s, _ in pairs],
+                          [d for _, d in pairs])
+
+    def _grow(self, mgr: PagedKVCache, pressure: PressureManager, pools,
+              slot: int, n: int):
         """``mgr.append(slot, n)`` with page-pressure relief: on
-        OutOfPages, evict the newest-admitted other sequence (swap or
-        recompute) and retry.  Terminates because submit-time validation
-        guarantees any single request fits the pool alone."""
+        OutOfPages, reclaim prefix-cache leaves or evict the newest-
+        admitted other sequence (swap or recompute) and retry.
+        Terminates because submit-time validation guarantees any single
+        request fits the pool alone.  Returns the (possibly replaced)
+        pools with any copy-on-write page copies applied."""
         while True:
             try:
                 mgr.append(slot, n)
-                return
+                return self._apply_cow(mgr, pools)
             except OutOfPages:
                 pressure.relieve(pools, protect=slot)
 
@@ -261,149 +297,185 @@ class ServeEngine:
         serve = self.serve
         ps = mgr.page_size
         npages = mgr.num_pages
-        pools = self.model.init_paged_cache(npages, ps)
+        prefix = sched.prefix_cache
+        persist = self._shared_state if serve.prefix_cache else None
+        if persist is not None and persist[2] is not None:
+            pools = persist[2]          # cached pages carry live KV
+        else:
+            pools = self.model.init_paged_cache(npages, ps)
         pre_scan, pre_chunk, decode = self._paged_fns()
         key = key if key is not None else jax.random.PRNGKey(serve.seed)
         next_tok = np.zeros((serve.max_batch,), np.int32)
         chunk = serve.prefill_chunk_tokens
         budget = serve.prefill_budget_tokens
 
-        while sched.has_work:
-            sched.retire()
-            admitted = sched.admit()
-            # RESUMING path: swap-preempted requests re-admitted by the
-            # scheduler get their stashed KV copied back into the pages
-            # adopt_pages just materialised; a sequence that was decoding
-            # when evicted rejoins the decode batch directly (its next
-            # input token was sampled before the preemption).
-            for slot, req in admitted:
-                if pressure.holds(req.id):
-                    pools = pressure.restore(pools, slot, req)
-                if req.state == RUNNING:
-                    next_tok[slot] = req.generated[-1]
-            if not admitted and not sched.running():
-                if not sched.waiting and not sched.resuming:
-                    break               # everything retired
-                # submit-time validation guarantees the head of either
-                # queue fits an empty pool (the watermark is waived when
-                # no slot is occupied); kept as a cheap tripwire
-                req = (sched.resuming or sched.waiting)[0]
-                raise RuntimeError(
-                    f"pool too small for request {req.id}: needs "
-                    f"{-(-req.target_len // ps)} pages, pool has "
-                    f"{npages - 1}")
-            if serve.debug_invariants:
-                mgr.check_invariants()
-
-            # ---- prefill phase -------------------------------------------
-            if serve.prefill_mode == "scan":
-                # legacy: the whole (re)prefill source at once, one token
-                # per scan step, retraced per length (equivalence oracle)
+        try:
+            while sched.has_work:
+                sched.retire()
+                admitted = sched.admit()
+                # RESUMING path: swap-preempted requests re-admitted by the
+                # scheduler get their stashed KV copied back into the pages
+                # admission just materialised (their shared prefix was
+                # re-shared from the index); a sequence that was decoding
+                # when evicted rejoins the decode batch directly (its next
+                # input token was sampled before the preemption).  A stash
+                # whose resume was downgraded to recompute is dropped.
                 for slot, req in admitted:
-                    if sched.slots[slot] is not req \
-                            or req.state != PREFILLING:
-                        continue        # preempted again, or swap-resumed
-                    toks = req.prefill_tokens
-                    self._grow(mgr, pressure, pools, slot, len(toks))
-                    pools, last_logits = pre_scan(
-                        self.params, jnp.asarray(toks[None]), pools,
-                        jnp.asarray(mgr.device_row(slot)))
-                    req.prefilled = len(toks)
-                    if req.generated:
-                        self._resume_decode(req, slot, next_tok)
-                    else:
-                        key, sub = jax.random.split(key)
-                        yield self._first_token(req, slot, last_logits,
-                                                next_tok, sub)
-            else:
-                # chunked: fixed-size chunks through the full forward,
-                # budgeted per step so decode slots keep producing; jobs
-                # for distinct sequences batch into one launch, padded to
-                # the next power-of-two row count (a lone prefilling
-                # prompt stays a 1-row launch; traces stay bounded by
-                # log2(max_batch)+1 widths, never by prompt length)
-                width = serve.max_batch
-                for group in self._prefill_groups(
-                        sched.prefill_schedule(budget, chunk), width):
-                    live = []
-                    for slot, req, start, n in group:
+                    if pressure.holds(req.id):
+                        if req.resume_kind == "swap":
+                            pools = pressure.restore(pools, slot, req)
+                        else:
+                            pressure.drop(req.id)
+                    if req.state == RUNNING:
+                        next_tok[slot] = req.generated[-1]
+                if not admitted and not sched.running():
+                    if not sched.waiting and not sched.resuming:
+                        break               # everything retired
+                    # submit-time validation guarantees the head of either
+                    # queue fits an empty pool (the watermark is waived when
+                    # no slot is occupied); kept as a cheap tripwire
+                    req = (sched.resuming or sched.waiting)[0]
+                    raise RuntimeError(
+                        f"pool too small for request {req.id}: needs "
+                        f"{-(-req.target_len // ps)} pages, pool has "
+                        f"{npages - 1}")
+                if serve.debug_invariants:
+                    mgr.check_invariants(
+                        extern_refs=prefix.page_refs() if prefix else None)
+
+                # ---- prefill phase -------------------------------------------
+                if serve.prefill_mode == "scan":
+                    # legacy: the whole uncached (re)prefill tail at once,
+                    # one token per scan step, retraced per length
+                    # (equivalence oracle); a prefix-cache hit starts the
+                    # scan at matched_len over the shared pages
+                    for slot, req in admitted:
                         if sched.slots[slot] is not req \
                                 or req.state != PREFILLING:
-                            continue    # victim of an earlier _grow
-                        self._grow(mgr, pressure, pools, slot, n)
-                        live.append((slot, req, start, n))
-                    # _grow may have evicted an earlier group member
-                    live = [(s, r, st, n) for s, r, st, n in live
-                            if sched.slots[s] is r]
-                    if not live:
-                        continue
-                    bw = 1
-                    while bw < len(live):
-                        bw *= 2
-                    bw = min(bw, width)
-                    buf = np.zeros((bw, chunk), np.int32)
-                    table = np.full((bw, mgr.max_pages_per_seq),
-                                    mgr.SCRATCH, np.int32)
-                    pos0 = np.zeros((bw,), np.int32)
-                    nval = np.zeros((bw,), np.int32)
-                    for i, (slot, req, start, n) in enumerate(live):
-                        buf[i, :n] = req.prefill_tokens[start:start + n]
-                        table[i] = mgr.table[slot]
-                        pos0[i] = start
-                        nval[i] = n
-                    pools, last_logits = pre_chunk(
-                        self.params, jnp.asarray(buf), pools,
-                        jnp.asarray(table), jnp.asarray(pos0),
-                        jnp.asarray(nval))
-                    for i, (slot, req, start, n) in enumerate(live):
-                        req.prefilled = start + n
-                        if not req.prefill_done:
-                            continue
-                        if req.generated:   # recompute-resume finished
+                            continue        # preempted again, or swap-resumed
+                        start = req.prefilled
+                        toks = req.prefill_tokens[start:]
+                        pools = self._grow(mgr, pressure, pools, slot,
+                                           len(toks))
+                        pools, last_logits = pre_scan(
+                            self.params, jnp.asarray(toks[None]), pools,
+                            jnp.asarray(mgr.device_row(slot)),
+                            jnp.full((1,), start, jnp.int32))
+                        req.prefilled = start + len(toks)
+                        if req.generated:
                             self._resume_decode(req, slot, next_tok)
                         else:
                             key, sub = jax.random.split(key)
-                            yield self._first_token(
-                                req, slot, last_logits[i:i + 1],
-                                next_tok, sub)
+                            yield self._first_token(req, slot, last_logits,
+                                                    next_tok, sub)
+                else:
+                    # chunked: fixed-size chunks through the full forward,
+                    # budgeted per step so decode slots keep producing; jobs
+                    # for distinct sequences batch into one launch, padded to
+                    # the next power-of-two row count (a lone prefilling
+                    # prompt stays a 1-row launch; traces stay bounded by
+                    # log2(max_batch)+1 widths, never by prompt length)
+                    width = serve.max_batch
+                    for group in self._prefill_groups(
+                            sched.prefill_schedule(budget, chunk), width):
+                        live = []
+                        for slot, req, start, n in group:
+                            if sched.slots[slot] is not req \
+                                    or req.state != PREFILLING:
+                                continue    # victim of an earlier _grow
+                            pools = self._grow(mgr, pressure, pools, slot, n)
+                            live.append((slot, req, start, n))
+                        # _grow may have evicted an earlier group member
+                        live = [(s, r, st, n) for s, r, st, n in live
+                                if sched.slots[s] is r]
+                        if not live:
+                            continue
+                        bw = 1
+                        while bw < len(live):
+                            bw *= 2
+                        bw = min(bw, width)
+                        buf = np.zeros((bw, chunk), np.int32)
+                        table = np.full((bw, mgr.max_pages_per_seq),
+                                        mgr.SCRATCH, np.int32)
+                        pos0 = np.zeros((bw,), np.int32)
+                        nval = np.zeros((bw,), np.int32)
+                        for i, (slot, req, start, n) in enumerate(live):
+                            buf[i, :n] = req.prefill_tokens[start:start + n]
+                            table[i] = mgr.table[slot]
+                            pos0[i] = start
+                            nval[i] = n
+                        self.prefill_launches += 1
+                        pools, last_logits = pre_chunk(
+                            self.params, jnp.asarray(buf), pools,
+                            jnp.asarray(table), jnp.asarray(pos0),
+                            jnp.asarray(nval))
+                        for i, (slot, req, start, n) in enumerate(live):
+                            req.prefilled = start + n
+                            if not req.prefill_done:
+                                continue
+                            if req.generated:   # recompute-resume finished
+                                self._resume_decode(req, slot, next_tok)
+                            else:
+                                key, sub = jax.random.split(key)
+                                yield self._first_token(
+                                    req, slot, last_logits[i:i + 1],
+                                    next_tok, sub)
 
-            # ---- decode phase --------------------------------------------
-            cand = [(s, r) for s, r in sched.decoding() if not r.done]
-            # materialise the page (maybe a fresh one) every running
-            # sequence's next token will be written to -- evicting other
-            # sequences under pressure -- THEN snapshot the table for the
-            # device step.
-            for slot, req in cand:
-                if sched.slots[slot] is not req:
-                    continue            # evicted by an earlier _grow
-                self._grow(mgr, pressure, pools, slot, 1)
-            running = [(s, r) for s, r in cand if sched.slots[s] is r]
-            if serve.debug_invariants:
-                mgr.check_invariants()
-            if not running:
-                continue
-            pos_np = np.zeros((serve.max_batch,), np.int32)
-            for slot, _ in running:
-                pos_np[slot] = mgr.seq_len(slot) - 1
-            table = mgr.device_table()
-            for slot, _ in sched.prefilling():
-                # mid-prefill slots sit out the decode step: scratch-page
-                # table row + pos 0, like idle slots (their real pages
-                # must not see the decode step's writes)
-                table[slot, :] = mgr.SCRATCH
-            logits, pools = decode(
-                self.params, jnp.asarray(next_tok), pools,
-                jnp.asarray(table), jnp.asarray(pos_np))
-            key, sub = jax.random.split(key)
-            toks = np.asarray(sample_token(
-                logits, sub, temperature=serve.temperature,
-                top_k=serve.top_k))
-            for slot, req in running:
-                tok = int(toks[slot])
-                req.generated.append(tok)
-                next_tok[slot] = tok
-                yield StreamEvent(req.id, tok, len(req.generated) - 1,
-                                  req.done)
+                # ---- decode phase --------------------------------------------
+                cand = [(s, r) for s, r in sched.decoding() if not r.done]
+                # materialise the page (maybe a fresh one) every running
+                # sequence's next token will be written to -- evicting other
+                # sequences under pressure -- THEN snapshot the table for the
+                # device step.
+                for slot, req in cand:
+                    if sched.slots[slot] is not req:
+                        continue            # evicted by an earlier _grow
+                    pools = self._grow(mgr, pressure, pools, slot, 1)
+                running = [(s, r) for s, r in cand if sched.slots[s] is r]
+                if serve.debug_invariants:
+                    mgr.check_invariants(
+                        extern_refs=prefix.page_refs() if prefix else None)
+                if not running:
+                    continue
+                pos_np = np.zeros((serve.max_batch,), np.int32)
+                for slot, _ in running:
+                    pos_np[slot] = mgr.seq_len(slot) - 1
+                table = mgr.device_table()
+                for slot, _ in sched.prefilling():
+                    # mid-prefill slots sit out the decode step: scratch-page
+                    # table row + pos 0, like idle slots (their real pages
+                    # must not see the decode step's writes)
+                    table[slot, :] = mgr.SCRATCH
+                logits, pools = decode(
+                    self.params, jnp.asarray(next_tok), pools,
+                    jnp.asarray(table), jnp.asarray(pos_np))
+                key, sub = jax.random.split(key)
+                toks = np.asarray(sample_token(
+                    logits, sub, temperature=serve.temperature,
+                    top_k=serve.top_k))
+                for slot, req in running:
+                    tok = int(toks[slot])
+                    req.generated.append(tok)
+                    next_tok[slot] = tok
+                    yield StreamEvent(req.id, tok, len(req.generated) - 1,
+                                      req.done)
+        finally:
+            # A stream can end early: the caller abandons the generator
+            # (GeneratorExit) or an error escapes.  With persistent
+            # prefix-cache state the shared manager/pools outlive this
+            # call, so reconcile: this stream's live slots are freed
+            # (their requests are lost with the call, shared pages just
+            # drop one reference), un-replayed COW debts die with them,
+            # and the persisted pools reference is refreshed -- `pools`
+            # is always the latest post-launch (undonated) object.
+            if persist is not None:
+                mgr.cow_pending.clear()
+                for slot in range(sched.max_slots):
+                    if sched.slots[slot] is not None \
+                            and mgr.is_active(slot):
+                        mgr.free(slot)
+                        sched.slots[slot] = None
+                persist[2] = pools
 
     def throughput_tokens_per_s(self, batch: int, prompt_len: int,
                                 n_new: int = 8) -> float:

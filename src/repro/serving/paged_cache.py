@@ -12,6 +12,18 @@ Page 0 is reserved as a scratch page: idle decode slots keep an all-zero
 table row and position 0, so their (ignored) writes land in scratch and
 never touch pages owned by live sequences.
 
+Pages carry **reference counts** so physical pages can be shared across
+slots (prefix caching: several sequences with a common prompt prefix
+read the same pages) and held by the radix prefix index after their
+writer retires.  ``share_pages`` points an empty slot at already-resident
+pages, ``incref``/``decref`` manage external (index) holds, and a page
+only returns to the free list when its last reference drops.  Writes
+stay safe via **copy-on-write**: ``append`` never writes into a
+partially-filled tail page that is shared -- it moves the slot onto a
+fresh copy first and records the (src, dst) pair in ``cow_pending`` so
+the engine can replay the page copy on the device pools before the next
+kernel launch.
+
 All state is plain numpy/int -- allocation runs on host between device
 steps, the device only ever sees the int32 table snapshot.
 """
@@ -53,6 +65,14 @@ class PagedKVCache:
         self._active = np.zeros((max_slots,), bool)
         self.table = np.zeros((max_slots, max_pages_per_seq), np.int32)
         self.peak_used_pages = 0
+        # per-page reference count: one per slot listing the page plus one
+        # per external hold (prefix index).  Free pages are 0; scratch is
+        # never refcounted.
+        self._ref = np.zeros((num_pages,), np.int64)
+        # copy-on-write debts: (src, dst) physical page pairs whose
+        # device contents the engine must copy before the next launch
+        # that reads or writes dst.
+        self.cow_pending: list = []
 
     # -- introspection -------------------------------------------------
     @property
@@ -96,6 +116,62 @@ class PagedKVCache:
         table per chunk)."""
         return self.table[slot:slot + 1].copy()
 
+    # -- reference counting (prefix sharing) ----------------------------
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def incref(self, page: int) -> None:
+        """Add a reference to a resident page (a page with no references
+        may be reallocated at any moment, so incref'ing it is a bug)."""
+        if page == self.SCRATCH:
+            raise ValueError("scratch page cannot be referenced")
+        if self._ref[page] <= 0:
+            raise ValueError(f"page {page} is free, cannot incref")
+        self._ref[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop a reference; returns True when the page's last reference
+        fell and it went back to the free list."""
+        if page == self.SCRATCH:
+            raise ValueError("scratch page cannot be referenced")
+        if self._ref[page] <= 0:
+            raise ValueError(f"page {page} already free, cannot decref")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def _take_free(self) -> int:
+        page = self._free.pop()
+        self._ref[page] = 1
+        return page
+
+    def share_pages(self, slot: int, pages: list, n_tokens: int) -> None:
+        """Point an empty active slot at already-resident ``pages``
+        (incref'ing each): the slot now reads ``n_tokens`` of KV it never
+        computed.  ``n_tokens`` may stop short of the last page's
+        capacity -- copy-on-write in ``append`` protects the shared tail
+        from the slot's own writes."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} not active")
+        if self._pages[slot] or self._lens[slot]:
+            raise ValueError(f"slot {slot} not empty")
+        if not pages:
+            raise ValueError("nothing to share")
+        if len(pages) > self.max_pages_per_seq:
+            raise ValueError(f"{len(pages)} pages exceeds max_pages_per_seq")
+        if not ((len(pages) - 1) * self.page_size
+                < n_tokens <= len(pages) * self.page_size):
+            raise ValueError(
+                f"n_tokens {n_tokens} inconsistent with {len(pages)} pages")
+        for page in pages:
+            self.incref(page)            # validates resident + not scratch
+        for i, page in enumerate(pages):
+            self.table[slot, i] = page
+        self._pages[slot] = list(pages)
+        self._lens[slot] = n_tokens
+
     # -- alloc / append / free -----------------------------------------
     def alloc(self, slot: int) -> None:
         """Activate an empty slot (no pages yet -- append() materialises
@@ -108,21 +184,38 @@ class PagedKVCache:
     def append(self, slot: int, n: int = 1) -> list:
         """Record ``n`` new tokens for ``slot``, allocating pages as the
         sequence crosses page boundaries.  Returns the newly materialised
-        pages (empty when the tokens fit in the current tail page)."""
+        pages (empty when the tokens fit in the current tail page).
+
+        Copy-on-write: when the write would extend a partially-filled
+        tail page that other references share, the slot is moved onto a
+        fresh page first (old tail decref'd, (src, dst) recorded in
+        ``cow_pending`` for the engine to replay on the device pools) --
+        a shared page is never written through."""
         if not self._active[slot]:
             raise ValueError(f"slot {slot} not active")
-        new_len = int(self._lens[slot]) + n
-        need = pages_needed(int(self._lens[slot]), new_len, self.page_size)
+        cur = int(self._lens[slot])
+        new_len = cur + n
+        need = pages_needed(cur, new_len, self.page_size)
+        cow = (n > 0 and cur % self.page_size != 0 and self._pages[slot]
+               and self._ref[self._pages[slot][-1]] > 1)
         if -(-new_len // self.page_size) > self.max_pages_per_seq:
             raise OutOfPages(
                 f"slot {slot}: {new_len} tokens exceeds "
                 f"max_pages_per_seq={self.max_pages_per_seq}")
-        if need > len(self._free):
+        if need + (1 if cow else 0) > len(self._free):
             raise OutOfPages(
-                f"slot {slot}: need {need} pages, {len(self._free)} free")
+                f"slot {slot}: need {need + (1 if cow else 0)} pages, "
+                f"{len(self._free)} free")
+        if cow:
+            old = self._pages[slot][-1]
+            new = self._take_free()
+            self._pages[slot][-1] = new
+            self.table[slot, len(self._pages[slot]) - 1] = new
+            self.decref(old)
+            self.cow_pending.append((old, new))
         new_pages = []
         for _ in range(need):
-            page = self._free.pop()
+            page = self._take_free()
             self.table[slot, len(self._pages[slot])] = page
             self._pages[slot].append(page)
             new_pages.append(page)
@@ -131,11 +224,13 @@ class PagedKVCache:
         return new_pages
 
     def free(self, slot: int) -> None:
-        """Retire a slot: return its pages to the free list and reset its
+        """Retire a slot: drop its reference on every page (pages whose
+        last reference falls return to the free list) and reset its
         table row to scratch."""
         if not self._active[slot]:
             raise ValueError(f"slot {slot} not active")
-        self._free.extend(reversed(self._pages[slot]))
+        for page in reversed(self._pages[slot]):
+            self.decref(page)
         self._pages[slot] = []
         self.table[slot, :] = self.SCRATCH
         self._lens[slot] = 0
@@ -143,11 +238,13 @@ class PagedKVCache:
 
     # -- preemption / swap (page-pressure subsystem) --------------------
     def release_pages(self, slot: int) -> list:
-        """Preempt a slot: deactivate it and return its pages to the free
-        list.  Returns the page list it owned so the caller can account
-        for them -- any contents worth keeping (swap-out) must have been
-        copied off the device BEFORE this call, because the pages may be
-        reallocated to another sequence immediately."""
+        """Preempt a slot: deactivate it and drop its page references
+        (exclusive pages return to the free list; shared pages stay
+        resident for their other holders).  Returns the page list it
+        held so the caller can account for them -- any refcount-1
+        contents worth keeping (swap-out) must have been copied off the
+        device BEFORE this call, because freed pages may be reallocated
+        to another sequence immediately."""
         if not self._active[slot]:
             raise ValueError(f"slot {slot} not active")
         pages = list(self._pages[slot])
@@ -181,13 +278,39 @@ class PagedKVCache:
         return self.peak_used_pages / max(1, self.usable_pages)
 
     # -- invariants (exercised by the property tests) -------------------
-    def check_invariants(self) -> None:
-        owned = [p for pages in self._pages for p in pages]
-        assert self.SCRATCH not in owned, "scratch page was allocated"
-        assert len(owned) == len(set(owned)), "page double-owned"
-        assert not (set(owned) & set(self._free)), "page owned AND free"
-        assert len(owned) + len(self._free) == self.num_pages - 1, \
-            "page leaked"
+    def check_invariants(self, extern_refs: dict = None) -> None:
+        """``extern_refs``: page -> count of references held outside any
+        slot (the prefix index's holds).  When given, every page's
+        refcount must be exactly its slot references plus its external
+        references; without it, only ``refcount >= slot references`` can
+        be (and is) asserted."""
+        slot_refs = np.zeros((self.num_pages,), np.int64)
+        for pages in self._pages:
+            assert len(pages) == len(set(pages)), \
+                "page listed twice by one slot"
+            for p in pages:
+                slot_refs[p] += 1
+        assert slot_refs[self.SCRATCH] == 0, "scratch page was allocated"
+        assert self._ref[self.SCRATCH] == 0, "scratch page refcounted"
+        free_set = set(self._free)
+        assert len(free_set) == len(self._free), "free list duplicate"
+        assert self.SCRATCH not in free_set, "scratch page freed"
+        for p in range(1, self.num_pages):
+            if p in free_set:
+                assert self._ref[p] == 0, f"page {p} free with refs"
+                assert slot_refs[p] == 0, f"page {p} owned AND free"
+            else:
+                assert self._ref[p] > 0, f"page {p} leaked (no refs)"
+                assert self._ref[p] >= slot_refs[p], \
+                    f"page {p} refcount below its slot references"
+                if extern_refs is not None:
+                    assert self._ref[p] == slot_refs[p] + \
+                        extern_refs.get(p, 0), \
+                        f"page {p} refcount does not balance"
+        if extern_refs is not None:
+            for p, n in extern_refs.items():
+                assert n > 0 and self._ref[p] >= n, \
+                    f"external hold on page {p} unbacked"
         for slot in range(self.max_slots):
             have = len(self._pages[slot])
             assert have * self.page_size >= self._lens[slot], \

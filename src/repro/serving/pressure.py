@@ -86,6 +86,31 @@ def scatter_pages(pools, pages, host_data):
                         jax.tree.map(jnp.asarray, host_data))
 
 
+def _copy_impl(pools, src, dst):
+    def cp(a):
+        axis = a.ndim - PAGE_AXIS_FROM_END
+        data = jnp.take(a, src, axis=axis)
+        sl = (slice(None),) * axis + (dst,)
+        return a.at[sl].set(data)
+
+    return jax.tree.map(cp, pools)
+
+
+_copy_jit = jax.jit(
+    _copy_impl,
+    donate_argnums=(0,) if jax.default_backend() != "cpu" else ())
+
+
+def copy_pages(pools, srcs, dsts):
+    """Device-side page copy (``dst[i] <- src[i]`` in every pool leaf):
+    the data half of copy-on-write -- the host manager moved a slot off
+    a shared tail page, this replays the contents onto the fresh copy
+    before the next launch writes it.  All sources are read before any
+    destination is written (parallel-copy semantics)."""
+    return _copy_jit(pools, jnp.asarray(np.asarray(srcs, np.int32)),
+                     jnp.asarray(np.asarray(dsts, np.int32)))
+
+
 def _nbytes(tree) -> int:
     return sum(a.nbytes for a in jax.tree.leaves(tree))
 
@@ -137,7 +162,7 @@ class PressureManager:
     def __init__(self, cfg: ModelConfig, serve: ServeConfig,
                  cache: PagedKVCache, sched: ContinuousBatchScheduler, *,
                  latency_model: Optional[OffloadLatencyModel] = None,
-                 swap_latency_s: float = 5e-4):
+                 swap_latency_s: float = 5e-4, prefix_cache=None):
         if serve.preempt_policy not in ("swap", "recompute", "auto"):
             raise ValueError(
                 f"unknown preempt_policy {serve.preempt_policy!r}")
@@ -149,8 +174,10 @@ class PressureManager:
         self.lat = latency_model or OffloadLatencyModel()
         self.swap_latency_s = swap_latency_s
         self.dtype_bytes = jnp.dtype(cfg.dtype).itemsize
+        self.prefix_cache = prefix_cache    # RadixPrefixIndex or None
         self.stats = {"preemptions": 0, "swaps": 0, "recomputes": 0,
-                      "swap_bytes_out": 0, "swap_bytes_in": 0}
+                      "swap_bytes_out": 0, "swap_bytes_in": 0,
+                      "cache_evictions": 0, "swap_drops": 0}
 
     # -- policy ----------------------------------------------------------
     def choose_policy(self, n_pages: int, n_tokens: int) -> str:
@@ -168,10 +195,18 @@ class PressureManager:
         return "swap" if swap_s < rec_s else "recompute"
 
     # -- evict -----------------------------------------------------------
-    def relieve(self, pools, protect: Optional[int] = None) -> Request:
-        """Evict the newest-admitted sequence other than ``protect``.
-        Raises OutOfPages when nothing is preemptible (cannot happen for
-        pool-validated requests: the protected slot alone always fits)."""
+    def relieve(self, pools, protect: Optional[int] = None
+                ) -> Optional[Request]:
+        """Free at least one page: first reclaim an LRU leaf from the
+        prefix index (cached-but-idle KV goes before live sequences),
+        else evict the newest-admitted sequence other than ``protect``.
+        Returns the preempted request, or None when index eviction
+        sufficed.  Raises OutOfPages when nothing is reclaimable (cannot
+        happen for pool-validated requests: the protected slot alone
+        always fits an otherwise-empty pool)."""
+        if self.prefix_cache is not None and self.prefix_cache.evict(1):
+            self.stats["cache_evictions"] += 1
+            return None
         victim = self.sched.preemption_victim(protect)
         if victim is None:
             raise OutOfPages(
@@ -181,8 +216,13 @@ class PressureManager:
         return self.preempt_slot(pools, victim)
 
     def preempt_slot(self, pools, slot: int) -> Request:
-        """Evict a specific slot: decide swap/recompute, copy KV off the
-        device if swapping, then hand the slot back to the scheduler."""
+        """Evict a specific slot: decide swap/recompute over its
+        *exclusive* pages, copy those off the device if swapping, then
+        hand the slot back to the scheduler.  Pages shared with other
+        slots or the prefix index (always a contiguous page-list prefix:
+        sharers and the index both hold block prefixes) are only
+        decref'd -- never swapped, never freed from under a sharer --
+        and re-shared at resume."""
         req = self.sched.slots[slot]
         # KV actually written to the pools: a PREFILLING victim has its
         # completed chunks; a decoding victim has prompt + all generated
@@ -191,17 +231,24 @@ class PressureManager:
             else req.prefill_total
         ps = self.cache.page_size
         n_pages = -(-written // ps)
-        kind = self.choose_policy(n_pages, written)
-        if kind == "swap" and not self.host_pool.has_room(n_pages):
+        owned = self.cache.owned_pages(slot)[:n_pages]
+        shared = 0
+        while shared < len(owned) \
+                and self.cache.refcount(owned[shared]) > 1:
+            shared += 1
+        shared_len = min(shared * ps, written)
+        kind = self.choose_policy(n_pages - shared, written - shared_len)
+        if kind == "swap" and not self.host_pool.has_room(n_pages - shared):
             kind = "recompute"
         if kind == "swap":
-            pages = self.cache.owned_pages(slot)[:n_pages]
-            host_data = gather_pages(pools, pages)
-            self.host_pool.put(req.id, host_data, n_pages)
+            host_data = gather_pages(pools, owned[shared:])
+            self.host_pool.put(req.id, host_data, n_pages - shared)
             self.stats["swaps"] += 1
             self.stats["swap_bytes_out"] += _nbytes(host_data)
+            req.resume_shared_len = shared_len
         else:
             self.stats["recomputes"] += 1
+            req.resume_shared_len = 0
         req.resume_kind = kind
         req.resume_len = written
         self.sched.preempt(slot)
@@ -214,11 +261,23 @@ class PressureManager:
 
     def restore(self, pools, slot: int, req: Request):
         """Copy a swap-resumed request's stashed KV back into the pages
-        ``adopt_pages`` just materialised for it.  Returns new pools."""
+        admission just materialised for it -- the exclusive suffix only;
+        the shared prefix was re-shared straight from the index.
+        Returns new pools."""
         host_data = self.host_pool.pop(req.id)
-        n_pages = -(-req.resume_len // self.cache.page_size)
-        pages = self.cache.owned_pages(slot)[:n_pages]
-        assert len(pages) == n_pages, (slot, pages, n_pages)
+        ps = self.cache.page_size
+        n_pages = -(-req.resume_len // ps)
+        k = req.resume_shared_len // ps
+        pages = self.cache.owned_pages(slot)[k:n_pages]
+        assert len(pages) == n_pages - k, (slot, pages, n_pages, k)
         self.stats["swap_bytes_in"] += _nbytes(host_data)
         req.resume_kind = None
+        req.resume_shared_len = 0
         return scatter_pages(pools, pages, host_data)
+
+    def drop(self, request_id: int) -> None:
+        """Discard a stash whose owner was downgraded to recompute while
+        waiting (its shared prefix got evicted, so the exclusive-suffix
+        stash alone no longer reconstructs the sequence)."""
+        self.host_pool.pop(request_id)
+        self.stats["swap_drops"] += 1

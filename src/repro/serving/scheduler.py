@@ -27,6 +27,19 @@ newcomer prompt never stalls the decode latency of running sequences.
 After a preemption the prefill source is the prompt *plus* every already
 generated token except the last (``Request.prefill_tokens``), so a
 recompute-resumed sequence rebuilds exactly the KV it lost.
+
+With a ``RadixPrefixIndex`` attached (``ServeConfig.prefix_cache``),
+admission first matches the request's tokens against the index: the
+longest page-aligned cached prefix is *shared* -- the slot's page-table
+row points at the already-resident physical pages
+(``PagedKVCache.share_pages``) and chunked prefill starts at
+``pos_start = matched_len``, skipping the matched prefix's attention
+launches entirely.  A full-prompt hit keeps every page shared and
+recomputes exactly one token (the last, whose logits seed sampling);
+its write copy-on-writes the shared tail page.  ``retire`` closes the
+loop by publishing the finished sequence's full prefix blocks back into
+the index, so the pages outlive the slot until LRU eviction reclaims
+them under pool pressure.
 """
 from __future__ import annotations
 
@@ -58,6 +71,9 @@ class Request:
     resume_kind: Optional[str] = None  # "swap" | "recompute" after preempt
     resume_len: int = 0                # materialised KV tokens at preempt
     preemptions: int = 0               # times this request was evicted
+    # -- prefix-cache bookkeeping --------------------------------------
+    matched_len: int = 0               # cached tokens shared at admission
+    resume_shared_len: int = 0         # shared-prefix tokens at swap-preempt
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -107,7 +123,8 @@ class ContinuousBatchScheduler:
     reclaims their pages, and picks preemption victims under pressure."""
 
     def __init__(self, cache: PagedKVCache, max_slots: Optional[int] = None,
-                 *, admission: str = "optimistic", watermark_pages: int = 1):
+                 *, admission: str = "optimistic", watermark_pages: int = 1,
+                 prefix_cache=None):
         if admission not in ("optimistic", "reserved"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cache = cache
@@ -115,6 +132,7 @@ class ContinuousBatchScheduler:
         assert self.max_slots <= cache.max_slots
         self.admission = admission
         self.watermark_pages = watermark_pages
+        self.prefix_cache = prefix_cache    # RadixPrefixIndex or None
         self.waiting: deque = deque()
         self.resuming: deque = deque()      # preempted, FIFO by arrival
         self.slots: List[Optional[Request]] = [None] * self.max_slots
@@ -151,11 +169,28 @@ class ContinuousBatchScheduler:
                          self.cache.page_size)
             for req in self.slots if req is not None)
 
+    def _publish_prefix(self, slot: int, req: Request) -> None:
+        """Insert a retiring sequence's full prefix blocks into the
+        prefix index so its pages stay resident for future requests.
+        Materialised KV covers ``prompt + generated[:-1]`` (the last
+        sampled token's KV was never written)."""
+        toks = req.prefill_tokens
+        n = min(len(toks), self.cache.seq_len(slot))
+        blocks = n // self.cache.page_size
+        if blocks:
+            self.prefix_cache.insert(
+                toks[:blocks * self.cache.page_size],
+                self.cache.owned_pages(slot)[:blocks])
+
     def retire(self) -> List[Request]:
-        """Retire finished sequences: free their pages and slots."""
+        """Retire finished sequences: free their pages and slots (full
+        prefix blocks are first published into the prefix index when one
+        is attached)."""
         retired = []
         for slot, req in enumerate(self.slots):
             if req is not None and req.done:
+                if self.prefix_cache is not None:
+                    self._publish_prefix(slot, req)
                 self.cache.free(slot)
                 req.state = FINISHED
                 req.slot = None
@@ -165,24 +200,73 @@ class ContinuousBatchScheduler:
                 retired.append(req)
         return retired
 
-    def _admission_need(self, req: Request, resumed: bool) -> int:
-        """Pages admission must see available.  Optimistic: what the
-        (re)prefill will materialise -- decode growth is preemption's
-        problem.  Reserved: the full worst case."""
+    def _match_prefix(self, req: Request) -> Tuple[List[int], int]:
+        """Longest usable cached prefix for a (re)prefill: whole pages
+        only, capped so at least one token is left to compute -- the
+        final chunk's logits seed the first sampled token.  A full
+        page-aligned hit keeps *all* its pages shared and recomputes
+        exactly the last token (whose write copy-on-writes the shared
+        tail page)."""
+        pages, m = self.prefix_cache.match(req.prefill_tokens,
+                                           record=False)
+        total = req.prefill_total
+        if m >= total:            # full hit (match never exceeds total)
+            return pages, total - 1
+        return pages[:m // self.cache.page_size], m
+
+    def _resolve_sharing(self, req: Request, resumed: bool):
+        """Plan a candidate admission's page sharing: returns
+        ``(shared_pages, shared_len, swap_resume)``.  A swap-resumed
+        request must re-find its exact preemption-time shared prefix
+        (the host stash only covers the exclusive suffix); if the index
+        evicted it meanwhile, the resume downgrades to recompute --
+        which then prefix-matches like any fresh request."""
+        swap_resume = bool(resumed and req.resume_kind == "swap"
+                           and req.resume_len)
+        if swap_resume and req.resume_shared_len:
+            pages, m = self.prefix_cache.match(req.prefill_tokens,
+                                               record=False)
+            k = req.resume_shared_len
+            if m >= k:
+                return pages[:k // self.cache.page_size], k, True
+            req.resume_kind = "recompute"
+            req.resume_shared_len = 0
+            swap_resume = False
+        if swap_resume or self.prefix_cache is None:
+            return [], 0, swap_resume
+        pages, m = self._match_prefix(req)
+        return pages, m, False
+
+    def _admission_need(self, req: Request, swap_resume: bool,
+                        shared_len: int) -> int:
+        """Free pages admission must see available, net of the shared
+        prefix.  Optimistic: what the (re)prefill will materialise --
+        decode growth is preemption's problem.  Reserved: the full worst
+        case.  A shared partial tail page (full-prompt hit) costs one
+        extra page for its copy-on-write copy."""
+        ps = self.cache.page_size
         if self.admission == "reserved":
-            return pages_needed(0, req.target_len, self.cache.page_size)
-        n = req.resume_len if (resumed and req.resume_kind == "swap") \
-            else req.prefill_total
-        return pages_needed(0, n, self.cache.page_size)
+            shared = -(-shared_len // ps) if shared_len else 0
+            need = max(0, pages_needed(0, req.target_len, ps) - shared)
+        else:
+            n = req.resume_len if swap_resume else req.prefill_total
+            need = pages_needed(shared_len, n, ps)
+        if shared_len % ps:
+            need += 1
+        return need
 
     def admit(self) -> List[Tuple[int, Request]]:
         """Fill free slots, resuming queue first (a preempted request
         goes ahead of every fresh arrival), then waiting -- both FIFO, no
         skipping: a large head-of-line request blocks rather than
-        starves.  Fresh and recompute-resumed requests enter PREFILLING;
-        a swap-resumed request gets its pages re-materialised here
-        (``adopt_pages``) and rejoins in its pre-preemption state once
-        the engine copies its host KV back."""
+        starves.  Fresh and recompute-resumed requests enter PREFILLING
+        -- with the longest cached page-aligned prefix shared into their
+        page-table row and ``prefilled`` advanced past it; a swap-resumed
+        request re-shares its preemption-time prefix and gets its
+        exclusive pages re-materialised here, rejoining in its
+        pre-preemption state once the engine copies its host KV back.
+        When free pages run short, LRU leaves of the prefix index are
+        evicted (and the match re-planned) before giving up."""
         admitted: List[Tuple[int, Request]] = []
         promised = 0                 # pages admitted but not yet allocated
         # snapshot BEFORE admitting: requests admitted this round land in
@@ -198,29 +282,52 @@ class ContinuousBatchScheduler:
                 req, resumed = self.waiting[0], False
             else:
                 break
-            need = self._admission_need(req, resumed)
-            if self.admission == "reserved":
-                headroom = self.cache.free_pages - reserved0 - promised
-            else:
-                # watermark reserve -- waived while the grid is empty so
-                # a lone request can always make progress
-                occupied = promised or admitted or any(
-                    r is not None for r in self.slots)
-                water = self.watermark_pages if occupied else 0
-                headroom = self.cache.free_pages - promised - water
+            while True:
+                shared_pages, shared_len, swap_resume = \
+                    self._resolve_sharing(req, resumed)
+                need = self._admission_need(req, swap_resume, shared_len)
+                if self.admission == "reserved":
+                    headroom = self.cache.free_pages - reserved0 - promised
+                else:
+                    # watermark reserve -- waived while the grid is empty
+                    # so a lone request can always make progress
+                    occupied = promised or admitted or any(
+                        r is not None for r in self.slots)
+                    water = self.watermark_pages if occupied else 0
+                    headroom = self.cache.free_pages - promised - water
+                if need <= headroom or self.prefix_cache is None:
+                    break
+                # free list short: reclaim LRU leaves from the prefix
+                # index, then re-plan (the evicted pages may have been
+                # part of this very match)
+                if self.prefix_cache.evict(need - headroom) == 0:
+                    break
             if need > headroom:
                 break
             (self.resuming if resumed else self.waiting).popleft()
-            if resumed and req.resume_kind == "swap" and req.resume_len:
-                # swap-in: materialise the pages now; the engine scatters
-                # the host-stashed KV into them right after admit()
-                self.cache.adopt_pages(slot, req.resume_len)
+            if swap_resume:
+                # swap-in: re-share the surviving prefix, materialise
+                # pages for the exclusive suffix; the engine scatters the
+                # host-stashed KV into them right after admit()
+                self.cache.alloc(slot)
+                if shared_len:
+                    self.cache.share_pages(slot, shared_pages, shared_len)
+                try:
+                    self.cache.append(slot, req.resume_len - shared_len)
+                except OutOfPages:
+                    self.cache.free(slot)
+                    raise
                 req.prefilled = req.resume_len
                 req.state = RUNNING if (req.generated and req.prefill_done) \
                     else PREFILLING
             else:
                 self.cache.alloc(slot)
-                req.prefilled = 0
+                if shared_len:
+                    self.cache.share_pages(slot, shared_pages, shared_len)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.record_match(shared_len)
+                req.prefilled = shared_len
+                req.matched_len = shared_len
                 req.state = PREFILLING
                 promised += need
             req.slot = slot

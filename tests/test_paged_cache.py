@@ -126,32 +126,70 @@ def test_mapping_roundtrip_random_lengths():
 
 @pytest.mark.parametrize("seed", range(5))
 def test_random_trace_no_leak_no_double_own(seed):
-    """Random admit/append/retire traffic: invariants hold at every step
-    and a fully drained pool returns to its initial state."""
+    """Random admit/append/retire/share traffic with external (prefix
+    index style) holds: the refcount invariants hold at every step --
+    every owned/shared page accounted once per holder, free pages have
+    refcount 0, scratch never refcounted -- and a fully drained pool
+    returns to its initial state."""
     rng = np.random.default_rng(seed)
     c = PagedKVCache(num_pages=24, page_size=4, max_slots=6,
                      max_pages_per_seq=6)
-    for _ in range(300):
-        op = rng.choice(["alloc", "append", "free", "release", "adopt"])
+    extern: dict = {}                           # page -> external holds
+    for _ in range(400):
+        op = rng.choice(["alloc", "append", "free", "release", "adopt",
+                         "share", "hold", "unhold"])
         slot = int(rng.integers(0, c.max_slots))
         try:
             if op == "alloc":
                 c.alloc(slot)
             elif op == "append":
                 c.append(slot, int(rng.integers(1, 6)))
+                c.cow_pending.clear()           # "device copy" applied
             elif op == "release":
                 c.release_pages(slot)
             elif op == "adopt":
                 c.adopt_pages(slot, int(rng.integers(1, 12)))
+            elif op == "share":
+                # mirror an admission prefix hit: point an empty slot at
+                # a prefix of some other slot's pages, non-aligned
+                # lengths included (the COW-protected shared tail)
+                src = int(rng.integers(0, c.max_slots))
+                pages = c.owned_pages(src)
+                k = int(rng.integers(1, len(pages) + 1)) if pages else 0
+                n = int(rng.integers((k - 1) * c.page_size + 1,
+                                     k * c.page_size + 1)) if k else 0
+                c.alloc(slot)
+                try:
+                    c.share_pages(slot, pages[:k], n)
+                except ValueError:
+                    c.free(slot)
+                    raise
+            elif op == "hold":
+                # external hold, like the prefix index taking a block
+                owned = [p for pages in c._pages for p in pages]
+                if owned:
+                    page = owned[int(rng.integers(0, len(owned)))]
+                    c.incref(page)
+                    extern[page] = extern.get(page, 0) + 1
+            elif op == "unhold":
+                if extern:
+                    page = list(extern)[int(rng.integers(0, len(extern)))]
+                    c.decref(page)
+                    extern[page] -= 1
+                    if not extern[page]:
+                        del extern[page]
             else:
                 c.free(slot)
         except (ValueError, OutOfPages):
             pass                                # rejected ops are no-ops
-        c.check_invariants()
+        c.check_invariants(extern_refs=extern)
     for slot in range(c.max_slots):
         if c.is_active(slot):
             c.free(slot)
-    c.check_invariants()
+    for page, n in list(extern.items()):
+        for _ in range(n):
+            c.decref(page)
+    c.check_invariants(extern_refs={})
     assert c.used_pages == 0 and c.free_pages == 23
     assert (c.device_table() == 0).all()
     assert c.peak_used_pages <= 23

@@ -1,0 +1,707 @@
+"""Prefix-cache subsystem tests: radix index, refcounts, copy-on-write,
+and end-to-end cross-request KV reuse.
+
+Unit level: ``PagedKVCache`` refcounting (share/incref/decref, COW of a
+shared partially-filled tail page, invariants with external holds) and
+``RadixPrefixIndex`` insert/match/evict semantics (longest page-aligned
+match, first-insert-wins on duplicate blocks, LRU leaf eviction that
+never frees a page a live slot still references, capacity trimming) --
+plus a hypothesis property test driving random traces through the real
+cache+index pair against a first-insert-wins oracle.
+
+System level: with ``ServeConfig(prefix_cache=True)`` warm requests
+share the cached prefix pages (admission reports ``matched_len``),
+chunked prefill skips the matched prefix's launches entirely, a
+full-prompt hit recomputes exactly one token through a COW'd tail page,
+and greedy tokens stay bit-identical to a cold run -- across chunked
+and scan prefill modes, and under a 60%-of-worst-case pool where
+preemption and prefix sharing interact.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.config import ParallelConfig, ServeConfig, get_model_config, \
+    reduce_for_smoke
+from repro.serving.paged_cache import OutOfPages, PagedKVCache
+from repro.serving.prefix_cache import RadixPrefixIndex
+from repro.serving.pressure import PressureManager
+from repro.serving.scheduler import (FINISHED, ContinuousBatchScheduler,
+                                     Request)
+
+PS = 4      # page size for the host-side unit tests
+
+
+def _cache(num_pages=16, max_slots=4, max_pages_per_seq=8):
+    return PagedKVCache(num_pages=num_pages, page_size=PS,
+                        max_slots=max_slots,
+                        max_pages_per_seq=max_pages_per_seq)
+
+
+# ---------------------------------------------------------------------------
+# unit: refcounts + copy-on-write in the page manager
+# ---------------------------------------------------------------------------
+
+def test_share_pages_refcounts_and_free_order():
+    c = _cache()
+    c.alloc(0)
+    pages = c.append(0, 2 * PS)                  # 2 full pages
+    assert [c.refcount(p) for p in pages] == [1, 1]
+    c.alloc(1)
+    c.share_pages(1, pages, 2 * PS)
+    assert [c.refcount(p) for p in pages] == [2, 2]
+    assert c.owned_pages(1) == pages and c.seq_len(1) == 2 * PS
+    c.check_invariants()
+    free_before = c.free_pages
+    c.free(0)                                    # sharer keeps them alive
+    assert c.free_pages == free_before
+    assert [c.refcount(p) for p in pages] == [1, 1]
+    c.check_invariants()
+    c.free(1)                                    # last ref: pages return
+    assert c.free_pages == free_before + 2
+    assert [c.refcount(p) for p in pages] == [0, 0]
+    c.check_invariants()
+
+
+def test_share_pages_validation():
+    c = _cache()
+    c.alloc(0)
+    pages = c.append(0, PS + 1)
+    c.alloc(1)
+    with pytest.raises(ValueError):
+        c.share_pages(1, [], 0)                  # nothing to share
+    with pytest.raises(ValueError):
+        c.share_pages(1, pages, 2 * PS + 1)      # tokens > capacity
+    with pytest.raises(ValueError):
+        c.share_pages(1, pages, PS)              # tokens under-use pages
+    with pytest.raises(ValueError):
+        c.share_pages(1, [c.SCRATCH], 1)         # scratch unshareable
+    free = [p for p in range(1, c.num_pages) if c.refcount(p) == 0][0]
+    with pytest.raises(ValueError):
+        c.share_pages(1, [free], 1)              # free page unshareable
+    c.share_pages(1, pages, PS + 1)              # exact length fine
+    with pytest.raises(ValueError):
+        c.share_pages(1, pages, PS + 1)          # slot no longer empty
+    c.check_invariants()
+
+
+def test_append_cow_on_shared_partial_tail():
+    """Appending into a partially-filled tail page that another slot
+    shares moves the writer onto a fresh copy: the sharer's page is
+    untouched, the (src, dst) pair is recorded for the device copy."""
+    c = _cache()
+    c.alloc(0)
+    pages = c.append(0, PS + 2)                  # tail page partial
+    c.alloc(1)
+    c.share_pages(1, pages, PS + 2)
+    tail = pages[-1]
+    assert c.refcount(tail) == 2
+    new = c.append(1, 1)                         # writes into the tail
+    assert new == []                             # no *extra* page
+    assert c.cow_pending and len(c.cow_pending) == 1
+    src, dst = c.cow_pending[0]
+    assert src == tail and dst != tail
+    assert c.owned_pages(1) == [pages[0], dst]
+    assert c.table[1, 1] == dst
+    assert c.refcount(tail) == 1                 # slot 0's alone again
+    assert c.refcount(dst) == 1
+    assert c.owned_pages(0) == pages             # sharer untouched
+    c.cow_pending.clear()
+    c.check_invariants()
+
+    # no COW when the tail is exclusive or the write is page-aligned
+    c2 = _cache()
+    c2.alloc(0)
+    p2 = c2.append(0, PS)                        # aligned: tail full
+    c2.alloc(1)
+    c2.share_pages(1, p2, PS)
+    c2.append(1, 1)                              # next write: fresh page
+    assert not c2.cow_pending
+    c2.append(1, 1)                              # exclusive partial tail
+    assert not c2.cow_pending
+    c2.check_invariants()
+
+
+def test_append_cow_needs_a_free_page():
+    c = PagedKVCache(num_pages=3, page_size=PS, max_slots=2,
+                     max_pages_per_seq=2)
+    c.alloc(0)
+    c.append(0, PS + 1)                          # both usable pages
+    c.alloc(1)
+    c.share_pages(1, c.owned_pages(0), PS + 1)
+    with pytest.raises(OutOfPages):
+        c.append(1, 1)                           # COW copy has no page
+    assert not c.cow_pending                     # failed append: no-op
+    assert c.seq_len(1) == PS + 1
+    c.check_invariants()
+
+
+def test_check_invariants_extern_refs_balance():
+    c = _cache()
+    c.alloc(0)
+    [page] = c.append(0, PS)
+    c.incref(page)                               # external (index) hold
+    c.check_invariants(extern_refs={page: 1})
+    with pytest.raises(AssertionError):
+        c.check_invariants(extern_refs={})       # unexplained refcount
+    c.free(0)
+    assert c.refcount(page) == 1                 # survives via the hold
+    c.check_invariants(extern_refs={page: 1})
+    assert c.decref(page) is True                # last ref: freed
+    c.check_invariants(extern_refs={})
+    with pytest.raises(ValueError):
+        c.decref(page)                           # already free
+    with pytest.raises(ValueError):
+        c.incref(page)                           # free page un-holdable
+
+
+# ---------------------------------------------------------------------------
+# unit: radix index
+# ---------------------------------------------------------------------------
+
+def _toks(*blocks):
+    """Build a token array from per-page lists."""
+    return np.asarray([t for b in blocks for t in b], np.int32)
+
+
+def test_index_match_insert_roundtrip():
+    c = _cache()
+    idx = RadixPrefixIndex(c)
+    assert idx.page_size == PS
+    c.alloc(0)
+    pages = c.append(0, 3 * PS)
+    toks = np.arange(3 * PS, dtype=np.int32)
+    assert idx.insert(toks, pages) == 3
+    assert len(idx) == 3 and idx.cached_pages == 3
+    assert [c.refcount(p) for p in pages] == [2, 2, 2]
+    c.check_invariants(extern_refs=idx.page_refs())
+
+    # exact, partial (non-aligned tail ignored), diverging, and miss
+    assert idx.match(toks) == (pages, 3 * PS)
+    assert idx.match(toks[:2 * PS + 1]) == (pages[:2], 2 * PS)
+    div = toks.copy()
+    div[PS] = 999
+    assert idx.match(div) == (pages[:1], PS)
+    assert idx.match(toks[1:]) == ([], 0)
+    assert idx.match(toks[:PS - 1]) == ([], 0)   # sub-page: no match
+
+    c.free(0)                                    # index keeps pages live
+    assert [c.refcount(p) for p in pages] == [1, 1, 1]
+    assert idx.match(toks) == (pages, 3 * PS)
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+def test_index_duplicate_insert_keeps_first_page():
+    """Two concurrent cold runs of one prompt produce duplicate blocks:
+    the first-published page wins, the newcomer's copy just loses its
+    last reference at retire."""
+    c = _cache()
+    idx = RadixPrefixIndex(c)
+    toks = np.arange(2 * PS, dtype=np.int32)
+    c.alloc(0)
+    first = c.append(0, 2 * PS)
+    idx.insert(toks, first)
+    c.alloc(1)
+    second = c.append(1, 2 * PS)
+    assert idx.insert(toks, second) == 0         # nothing new
+    assert idx.match(toks) == (first, 2 * PS)
+    assert [c.refcount(p) for p in second] == [1, 1]
+    c.free(0)
+    c.free(1)                                    # duplicates freed
+    assert [c.refcount(p) for p in second] == [0, 0]
+    assert idx.match(toks) == (first, 2 * PS)
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+def test_index_lru_leaf_eviction():
+    c = _cache(num_pages=32)
+    idx = RadixPrefixIndex(c)
+    seqs = []
+    for i in range(3):
+        toks = _toks([i] * PS, [10 + i] * PS)    # distinct 2-block paths
+        c.alloc(0)
+        pages = c.append(0, 2 * PS)
+        idx.insert(toks, pages)
+        c.free(0)
+        seqs.append((toks, pages))
+    free0 = c.free_pages
+    # touch sequence 0 so sequence 1 is LRU
+    idx.match(seqs[0][0])
+    assert idx.evict(1) == 1                     # one page freed...
+    assert c.free_pages == free0 + 1
+    # ...and it was the LRU path's leaf: seq 1 lost its tail block only
+    assert idx.match(seqs[1][0]) == (seqs[1][1][:1], PS)
+    assert idx.match(seqs[0][0]) == (seqs[0][1], 2 * PS)
+    assert idx.match(seqs[2][0]) == (seqs[2][1], 2 * PS)
+    # draining everything unwinds branches back-to-front, nothing leaks
+    assert idx.evict(100) == 5
+    assert len(idx) == 0 and c.used_pages == 0
+    c.check_invariants(extern_refs={})
+
+
+def test_index_eviction_skips_pages_shared_by_live_slots():
+    """Pressure eviction must *free* pages: a leaf whose page a live
+    slot still references is not touched (decref'ing it would strip the
+    index entry yet free nothing)."""
+    c = _cache()
+    idx = RadixPrefixIndex(c)
+    toks = np.arange(PS, dtype=np.int32)
+    c.alloc(0)
+    pages = c.append(0, PS)
+    idx.insert(toks, pages)
+    c.free(0)
+    c.alloc(1)
+    c.share_pages(1, pages, PS)                  # live sharer
+    assert idx.evict(1) == 0                     # nothing freeable
+    assert len(idx) == 1                         # entry survives
+    c.free(1)
+    assert idx.evict(1) == 1                     # now reclaimable
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+def test_index_capacity_trims_lru():
+    c = _cache(num_pages=32)
+    idx = RadixPrefixIndex(c, capacity_pages=2)
+    c.alloc(0)
+    pages = c.append(0, 4 * PS)
+    idx.insert(np.arange(4 * PS, dtype=np.int32), pages)
+    assert len(idx) == 2                         # trimmed leaf-first
+    c.free(0)
+    assert [c.refcount(p) for p in pages] == [1, 1, 0, 0]
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+# ---------------------------------------------------------------------------
+# property: random insert/match/evict traces against an oracle
+# ---------------------------------------------------------------------------
+
+def _run_prefix_trace(seed: int, steps: int = 40) -> None:
+    """Random trace through a real cache+index pair.  Oracle: dict of
+    block-path -> first-inserted page (first-insert-wins); after every
+    op the pair must agree with it and the pool invariants must hold."""
+    rng = np.random.default_rng(seed)
+    c = PagedKVCache(num_pages=64, page_size=PS, max_slots=2,
+                     max_pages_per_seq=8)
+    idx = RadixPrefixIndex(c)
+    oracle = {}                                  # path tuple -> page
+
+    def sync_oracle():
+        alive = {}
+        for node in idx._walk():
+            path, n = [], node
+            while n.block is not None:
+                path.append(n.block)
+                n = n.parent
+            alive[tuple(reversed(path))] = node.page
+        # every surviving node: known to the oracle, same page, and the
+        # surviving set is prefix-closed (eviction is leaves-only)
+        for path, page in alive.items():
+            assert oracle.get(path) == page
+            assert len(path) == 1 or path[:-1] in alive
+        for path in [p for p in oracle if p not in alive]:
+            del oracle[path]
+
+    def rand_tokens():
+        n_blocks = int(rng.integers(1, 5))
+        return rng.integers(0, 3, size=n_blocks * PS).astype(np.int32)
+
+    inserted = []
+    for _ in range(steps):
+        op = rng.choice(["insert", "match", "match_known", "evict",
+                         "share"])
+        if op == "insert":
+            toks = rand_tokens()
+            try:
+                c.alloc(0)
+                c.append(0, len(toks))
+            except OutOfPages:
+                c.free(0)
+                continue
+            pages = c.owned_pages(0)
+            idx.insert(toks, pages)
+            for i in range(len(pages)):
+                path = tuple(tuple(int(t) for t in toks[j:j + PS])
+                             for j in range(0, (i + 1) * PS, PS))
+                oracle.setdefault(path, pages[i])
+            c.free(0)
+            inserted.append(toks)
+        elif op == "match" or (op == "match_known" and not inserted):
+            toks = rand_tokens()
+            pages, m = idx.match(toks)
+            assert m == len(pages) * PS
+            want = []
+            for i in range(len(toks) // PS):
+                path = tuple(tuple(int(t) for t in toks[j:j + PS])
+                             for j in range(0, (i + 1) * PS, PS))
+                if path not in oracle:
+                    break
+                want.append(oracle[path])
+            assert pages == want
+        elif op == "match_known":
+            toks = inserted[int(rng.integers(0, len(inserted)))]
+            pages, m = idx.match(toks)
+            # a previously inserted sequence matches fully unless
+            # eviction trimmed it
+            paths_alive = m // PS
+            assert all(c.refcount(p) > 0 for p in pages)
+            assert paths_alive <= len(toks) // PS
+        elif op == "evict":
+            n = int(rng.integers(1, 4))
+            free0 = c.free_pages
+            freed = idx.evict(n)
+            assert c.free_pages == free0 + freed
+            sync_oracle()
+        else:                                    # share + release
+            toks = (inserted[int(rng.integers(0, len(inserted)))]
+                    if inserted else rand_tokens())
+            pages, m = idx.match(toks)
+            if m and not c.is_active(1):
+                c.alloc(1)
+                c.share_pages(1, pages, m)
+                c.free(1)
+        c.check_invariants(extern_refs=idx.page_refs())
+    idx.evict(10 ** 6)
+    for slot in (0, 1):
+        if c.is_active(slot):
+            c.free(slot)
+    assert c.used_pages == 0
+    c.check_invariants(extern_refs={})
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_prefix_trace_random(seed):
+    _run_prefix_trace(seed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_prefix_trace_property(seed):
+    _run_prefix_trace(seed)
+
+
+# ---------------------------------------------------------------------------
+# unit: preemption under sharing
+# ---------------------------------------------------------------------------
+
+def test_preempt_never_frees_pages_a_sharer_references():
+    """A victim holding shared prefix pages only decrefs them; its
+    exclusive suffix alone is released (and only that is stash-sized
+    for swap)."""
+    cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
+    c = PagedKVCache(num_pages=16, page_size=PS, max_slots=3,
+                     max_pages_per_seq=8)
+    idx = RadixPrefixIndex(c)
+    sched = ContinuousBatchScheduler(c, admission="optimistic",
+                                     watermark_pages=1, prefix_cache=idx)
+    serve = ServeConfig(preempt_policy="recompute", page_size=PS)
+    pressure = PressureManager(cfg, serve, c, sched, prefix_cache=idx)
+
+    prefix_toks = np.arange(2 * PS, dtype=np.int32)
+    a = Request(id=0, prompt=np.concatenate(
+        [prefix_toks, np.full(2, 77, np.int32)]), max_new_tokens=2)
+    b = Request(id=1, prompt=np.concatenate(
+        [prefix_toks, np.full(3, 88, np.int32)]), max_new_tokens=2)
+    # seed the index as a retiring sequence would
+    c.alloc(0)
+    seeded = c.append(0, 2 * PS)
+    idx.insert(prefix_toks, seeded)
+    c.free(0)
+
+    sched.submit(a)
+    sched.submit(b)
+    admitted = sched.admit()
+    assert [r.matched_len for _, r in admitted] == [2 * PS, 2 * PS]
+    assert c.owned_pages(a.slot)[:2] == seeded
+    assert c.owned_pages(b.slot)[:2] == seeded
+    assert [c.refcount(p) for p in seeded] == [3, 3]
+    # both finish their prefill tail into exclusive pages
+    for r in (a, b):
+        c.append(r.slot, r.prefill_total - r.prefilled)
+        r.prefilled = r.prefill_total
+    c.check_invariants(extern_refs=idx.page_refs())
+
+    victim = pressure.relieve(pools=None, protect=a.slot)
+    # relief prefers reclaiming idle cache pages -- but every index page
+    # is shared by live slots here, so it must preempt (newest first)
+    assert victim is b
+    assert victim.resume_kind == "recompute"
+    assert [c.refcount(p) for p in seeded] == [2, 2]   # decref'd only
+    assert c.owned_pages(a.slot)[:2] == seeded         # sharer intact
+    c.check_invariants(extern_refs=idx.page_refs())
+
+    # resume re-matches the (still cached) prefix instead of recomputing
+    [(slot2, res)] = sched.admit()
+    assert res is b and res.prefilled == 2 * PS
+    assert c.owned_pages(slot2)[:2] == seeded
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+def test_relieve_prefers_idle_cache_pages_over_preemption():
+    cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
+    c = PagedKVCache(num_pages=16, page_size=PS, max_slots=2,
+                     max_pages_per_seq=8)
+    idx = RadixPrefixIndex(c)
+    sched = ContinuousBatchScheduler(c, prefix_cache=idx)
+    serve = ServeConfig(preempt_policy="recompute", page_size=PS)
+    pressure = PressureManager(cfg, serve, c, sched, prefix_cache=idx)
+    c.alloc(0)
+    pages = c.append(0, PS)
+    idx.insert(np.arange(PS, dtype=np.int32), pages)
+    c.free(0)                                    # page idle, index-held
+    free0 = c.free_pages
+    assert pressure.relieve(pools=None) is None  # eviction sufficed
+    assert pressure.stats["cache_evictions"] == 1
+    assert pressure.stats["preemptions"] == 0
+    assert c.free_pages == free0 + 1
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+def test_reserved_admission_accounts_cow_page():
+    """The reserved worst-case reservation must include the +1 COW page
+    of a full-prompt hit's shared partial tail -- otherwise 'reserved
+    never preempts' can be violated one page short."""
+    c = PagedKVCache(num_pages=4, page_size=PS, max_slots=2,
+                     max_pages_per_seq=4)
+    idx = RadixPrefixIndex(c)
+    sched = ContinuousBatchScheduler(c, admission="reserved",
+                                     prefix_cache=idx)
+    toks = np.arange(2 * PS, dtype=np.int32)
+    c.alloc(0)
+    idx.insert(toks, c.append(0, 2 * PS))        # slot 0 keeps them live
+    full_hit = Request(id=0, prompt=toks.copy(), max_new_tokens=PS)
+    sched.submit(full_hit)
+    # target = 3*PS -> 3 pages worst, 2 shared; the remaining 1 free
+    # page is NOT enough: decode growth needs 1 AND the COW copy needs 1
+    # -- and nothing is evictable while slot 0 shares the cached pages
+    assert sched.admit() == []
+    assert full_hit.matched_len == 0             # still waiting
+    c.free(0)                                    # sharer gone: evictable
+    # admission trims one LRU leaf to cover the shortfall; the shrunken
+    # match (one full page, no partial shared tail) needs no COW page
+    [(slot, req)] = sched.admit()
+    assert req is full_hit and req.matched_len == PS
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+def test_blocked_admission_does_not_inflate_stats():
+    """A blocked head-of-queue request re-plans its match every admit()
+    call; only the consumed match may count in the hit/miss stats."""
+    c = PagedKVCache(num_pages=4, page_size=PS, max_slots=2,
+                     max_pages_per_seq=3)
+    idx = RadixPrefixIndex(c)
+    sched = ContinuousBatchScheduler(c, watermark_pages=0,
+                                     prefix_cache=idx)
+    toks = np.arange(PS, dtype=np.int32)
+    c.alloc(0)
+    idx.insert(toks, c.append(0, PS))
+    # slot 0 stays active holding the other pages: no room for the next
+    c.append(0, 2 * PS)
+    blocked = Request(id=1, prompt=np.concatenate(
+        [toks, np.full(PS, 7, np.int32)]), max_new_tokens=1)
+    sched.submit(blocked)
+    for _ in range(3):
+        assert sched.admit() == []               # pool exhausted
+    assert idx.stats["hits"] == idx.stats["misses"] == 0
+    c.free(0)
+    [(_, req)] = [x for x in sched.admit() if x[1] is blocked]
+    assert req.matched_len == PS
+    assert idx.stats["hits"] == 1 and idx.stats["hit_tokens"] == PS
+    c.check_invariants(extern_refs=idx.page_refs())
+
+
+# ---------------------------------------------------------------------------
+# system: end-to-end sharing through the engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    from repro.models import build_model
+    from repro.serving.engine import ServeEngine
+    cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make(serve):
+        return ServeEngine(model=model, params=params, cfg=cfg,
+                           serve=serve), cfg
+    return make
+
+
+ENGINE_KW = dict(max_batch=2, max_seq_len=96, top_k=1, page_size=16,
+                 prefill_chunk=16, debug_invariants=True)
+
+
+def _run(engine, reqs):
+    events = list(engine.generate_stream(reqs))
+    assert all(r.state == FINISHED for r in reqs)
+    assert len(events) == sum(r.max_new_tokens for r in reqs)
+    return [r.generated for r in reqs]
+
+
+def _mixed_requests(cfg, sys_prompt, seed, n=3, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(id=i, prompt=np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab_size, size=4 + 3 * i)]),
+        max_new_tokens=max_new) for i in range(n)]
+
+
+@pytest.mark.parametrize("mode", ["chunked", "scan"])
+def test_warm_requests_share_and_match_cold_tokens(tiny_engine, mode):
+    """Hit/miss/partial admission end-to-end: warm requests share the
+    page-aligned system-prompt prefix, prefill launches only cover the
+    uncached tail, and greedy tokens are bit-identical to a cold
+    engine."""
+    rng = np.random.default_rng(0)
+    engine, cfg = tiny_engine(ServeConfig(prefill_mode=mode, **ENGINE_KW))
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=40)   # 2.5 pages
+    oracle = _run(engine, _mixed_requests(cfg, sys_prompt, seed=1))
+
+    warm, cfg = tiny_engine(ServeConfig(prefix_cache=True,
+                                        prefill_mode=mode, **ENGINE_KW))
+    seeds = _mixed_requests(cfg, sys_prompt, seed=9)
+    _run(warm, seeds)                            # seed the index
+    assert seeds[0].matched_len == 0             # cold start missed
+    warm.prefill_launches = 0
+    reqs = _mixed_requests(cfg, sys_prompt, seed=1)
+    tokens = _run(warm, reqs)
+    assert tokens == oracle
+    assert all(r.matched_len == 32 for r in reqs)   # aligned 40 -> 32
+    if mode == "chunked":
+        # the matched prefix cost zero prefill-attention launches: every
+        # request's uncached tail fits one 16-token chunk, and chunks of
+        # distinct sequences batch -- cold needed >= 3 chunks/request
+        assert 0 < warm.prefill_launches <= len(reqs)
+    mgr, prefix = warm.last_cache, warm.last_prefix
+    mgr.check_invariants(extern_refs=prefix.page_refs())
+    assert mgr.used_pages == prefix.cached_pages > 0
+    assert prefix.stats["hit_tokens"] >= 32 * len(reqs)
+
+
+def test_full_prompt_hit_cow_divergence(tiny_engine):
+    """A fully-cached page-aligned prompt keeps every page shared and
+    recomputes exactly one token; the write COW-copies the shared tail
+    page, so the cached copy serves later requests unchanged."""
+    rng = np.random.default_rng(3)
+    engine, cfg = tiny_engine(ServeConfig(**ENGINE_KW))
+    prompt = rng.integers(0, cfg.vocab_size, size=32)       # 2 pages
+    [oracle] = _run(engine, [Request(id=0, prompt=prompt,
+                                     max_new_tokens=6)])
+
+    warm, cfg = tiny_engine(ServeConfig(prefix_cache=True, **ENGINE_KW))
+    _run(warm, [Request(id=1, prompt=prompt, max_new_tokens=6)])
+    warm.prefill_launches = 0
+    for rep in range(2, 4):                      # hit the COW path twice
+        [req] = [Request(id=rep, prompt=prompt, max_new_tokens=6)]
+        assert _run(warm, [req]) == [oracle]
+        assert req.matched_len == 31             # all but the last token
+        assert len(req.prompt) - req.matched_len == 1
+    assert warm.prefill_launches == 2            # one 1-token chunk each
+    warm.last_cache.check_invariants(
+        extern_refs=warm.last_prefix.page_refs())
+
+
+def test_multi_turn_extension_matches_generated_blocks(tiny_engine):
+    """A follow-up prompt that extends prompt+completion (a multi-turn
+    round trip) matches into the blocks the first turn *generated*."""
+    rng = np.random.default_rng(5)
+    warm, cfg = tiny_engine(ServeConfig(prefix_cache=True, **ENGINE_KW))
+    first = Request(id=0, prompt=rng.integers(0, cfg.vocab_size, size=30),
+                    max_new_tokens=8)
+    _run(warm, [first])
+    # materialised KV at retire: 30 + 8 - 1 = 37 tokens -> 2 full pages
+    follow_prompt = np.concatenate(
+        [first.prompt, np.asarray(first.generated, np.int32),
+         rng.integers(0, cfg.vocab_size, size=6)])
+    follow = Request(id=1, prompt=follow_prompt, max_new_tokens=4)
+    _run(warm, [follow])
+    assert follow.matched_len == 32              # past the prompt's 30
+
+    cold, cfg = tiny_engine(ServeConfig(**ENGINE_KW))
+    oracle = Request(id=2, prompt=follow_prompt, max_new_tokens=4)
+    _run(cold, [oracle])
+    assert follow.generated == oracle.generated
+
+
+def test_lru_eviction_under_pool_pressure(tiny_engine):
+    """A pool too small to cache every retired prompt forces LRU leaf
+    evictions (admission-time and OutOfPages-time) -- requests all
+    complete and the pool never leaks."""
+    rng = np.random.default_rng(6)
+    kw = dict(ENGINE_KW, num_pages=10)           # 9 usable pages
+    engine, cfg = tiny_engine(ServeConfig(prefix_cache=True, **kw))
+    reqs = [Request(id=i, prompt=rng.integers(0, cfg.vocab_size,
+                                              size=40 + i),
+                    max_new_tokens=12) for i in range(4)]
+    _run(engine, reqs)
+    prefix, pressure = engine.last_prefix, engine.last_pressure
+    assert prefix.stats["evicted_blocks"] > 0, "pool never pressured"
+    mgr = engine.last_cache
+    mgr.check_invariants(extern_refs=prefix.page_refs())
+    assert mgr.used_pages == prefix.cached_pages
+    assert mgr.used_pages <= 9
+    assert pressure.stats["preemptions"] >= 0    # may or may not preempt
+
+
+def test_abandoned_stream_leaves_persistent_state_clean(tiny_engine):
+    """Breaking out of a generate_stream mid-run (client disconnect)
+    must not wedge the persistent prefix-cache state: the abandoned
+    stream's slots are reconciled and the next call serves normally."""
+    rng = np.random.default_rng(12)
+    engine, cfg = tiny_engine(ServeConfig(prefix_cache=True, **ENGINE_KW))
+    prompt = rng.integers(0, cfg.vocab_size, size=34)
+    reqs = [Request(id=i, prompt=prompt.copy(), max_new_tokens=8)
+            for i in range(2)]
+    for ev in engine.generate_stream(reqs):
+        break                                    # abandon after 1 token
+    mgr = engine.last_cache
+    assert all(not mgr.is_active(s) for s in range(mgr.max_slots))
+    assert not mgr.cow_pending
+    mgr.check_invariants(extern_refs=engine.last_prefix.page_refs())
+
+    cold, cfg = tiny_engine(ServeConfig(**ENGINE_KW))
+    oracle = Request(id=9, prompt=prompt.copy(), max_new_tokens=8)
+    _run(cold, [oracle])
+    again = Request(id=3, prompt=prompt.copy(), max_new_tokens=8)
+    _run(engine, [again])                        # same engine, clean run
+    assert again.generated == oracle.generated
+    mgr.check_invariants(extern_refs=engine.last_prefix.page_refs())
+
+
+@pytest.mark.parametrize("policy", ["swap", "recompute"])
+def test_sharing_under_preemption_bit_identical(tiny_engine, policy):
+    """Shared system prompt + a pool at ~60% of worst-case demand: the
+    prefix cache, COW, preemption and swap interact, every request
+    completes, no shared page is freed from under a sharer (invariants
+    every step), and greedy tokens match the unpressured cold run."""
+    rng = np.random.default_rng(8)
+    engine, cfg = tiny_engine(ServeConfig(**ENGINE_KW))
+    sys_prompt = rng.integers(0, cfg.vocab_size, size=32)
+    spec = [(6, 20), (3, 26), (9, 18), (5, 24)]
+    def make():
+        r = np.random.default_rng(11)
+        return [Request(id=i, prompt=np.concatenate(
+            [sys_prompt, r.integers(0, cfg.vocab_size, size=s)]),
+            max_new_tokens=n) for i, (s, n) in enumerate(spec)]
+    oracle = _run(engine, make())
+
+    # 5 usable pages vs a 16-page realised worst case (~31%): tight
+    # enough that index eviction alone cannot absorb the pressure (the
+    # cached pages are mostly shared by live slots) and decode growth
+    # must preempt
+    pool = 6
+    kw = dict(ENGINE_KW, num_pages=pool, preempt_policy=policy)
+    pressured, cfg = tiny_engine(ServeConfig(prefix_cache=True, **kw))
+    _run(pressured, make())                      # seed (under pressure!)
+    tokens = _run(pressured, make())             # warm, still pressured
+    assert tokens == oracle
+    mgr, prefix = pressured.last_cache, pressured.last_prefix
+    pressure = pressured.last_pressure
+    assert pressure.stats["preemptions"] > 0, "pool never pressured"
+    assert prefix.stats["evicted_blocks"] > 0, "index never trimmed"
+    if policy == "swap":
+        assert pressure.stats["swaps"] > 0
+    assert mgr.peak_used_pages <= pool - 1
+    assert len(pressure.host_pool) == 0, "stash leaked"
+    mgr.check_invariants(extern_refs=prefix.page_refs())
+    assert mgr.used_pages == prefix.cached_pages
