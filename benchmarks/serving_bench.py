@@ -29,6 +29,12 @@ regress against):
   shares the cached system-prompt pages copy-on-write and computes only
   each request's unique tail.  Reports prefill tokens computed, TTFT
   and pages resident both ways; greedy tokens must be bit-identical.
+* **open_loop** -- drives ``EngineCore.step()`` directly under a
+  deterministic (seeded) Poisson arrival schedule with mixed per-request
+  ``SamplingParams`` (greedy and seeded temperature sampling): requests
+  arrive *while* the engine runs, instead of all up front.  Reports
+  TTFT and TPOT (time per output token) p50/p99 -- the latency numbers
+  an iteration-level engine exists for.
 
     PYTHONPATH=src python -m benchmarks.serving_bench \
         [--arch gemma2-2b] [--requests 12] [--prefill-len 512]
@@ -47,8 +53,9 @@ import numpy as np
 from repro.config import ParallelConfig, ServeConfig, get_model_config, \
     reduce_for_smoke
 from repro.models import build_model
+from repro.serving.core import EngineCore
 from repro.serving.engine import ServeEngine
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import Request, SamplingParams
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -72,7 +79,10 @@ def _warm(engine, cfg, serve, rng):
     """Compile everything the timed region will hit: the fused decode
     step, a multi-chunk prompt, and every power-of-two batched-prefill
     launch width up to max_batch (w concurrent short prompts prefill in
-    one step -> one width-w launch)."""
+    one step -> one width-w launch).  The engine core is persistent, so
+    the serving state (peak pages, pressure stats, any prefix blocks
+    the warmup published) is reset afterwards -- the reported metrics
+    must cover only the timed workload; jit caches survive the reset."""
     widths, w = [], 1
     while w < serve.max_batch:
         widths.append(w)
@@ -88,6 +98,7 @@ def _warm(engine, cfg, serve, rng):
             warms.append(Request(id=wid, prompt=rng.integers(
                 0, cfg.vocab_size, size=n), max_new_tokens=2))
         list(engine.generate_stream(warms))
+    engine.core.reset()
 
 
 def _build(arch: str, smoke: bool, small: bool = False):
@@ -145,7 +156,7 @@ def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
         events.append(ev)
     dt = time.perf_counter() - t0
 
-    mgr, sched = engine.last_cache, engine.last_scheduler
+    mgr = engine.last_cache
     total_new = sum(r.max_new_tokens for r in reqs)
     assert len(events) == total_new
     assert all(r.state == "FINISHED" for r in reqs)
@@ -168,7 +179,9 @@ def run(arch: str = "gemma2-2b", n_requests: int = 12, max_batch: int = 4,
         "peak_pages": mgr.peak_used_pages,
         "peak_kv_frac_of_dense": round(
             mgr.peak_used_pages / dense_pages, 3),
-        "finished": len(sched.finished),
+        # the persistent core also counts warmup requests in
+        # sched.finished; report this call's completions
+        "finished": sum(1 for r in reqs if r.state == "FINISHED"),
     }
     return stats
 
@@ -372,6 +385,102 @@ def prefix_sharing(arch: str = "gemma2-2b", n_requests: int = 6,
     return out
 
 
+def open_loop(arch: str = "gemma2-2b", n_requests: int = 10,
+              max_batch: int = 3, page_size: int = 0,
+              max_seq_len: int = 96, mean_gap_steps: float = 2.0,
+              seed: int = 0, smoke: bool = True, built=None) -> dict:
+    """Open-loop serving through ``EngineCore.step()``: a deterministic
+    seeded Poisson process schedules arrivals *by engine step* (each
+    inter-arrival gap ~ Exp(mean_gap_steps)), requests carry mixed
+    SamplingParams (greedy chats and seeded sampling jobs), and the
+    driver measures what a frontend would: TTFT (arrival -> first
+    token) and TPOT (mean gap between a request's tokens)."""
+    page_size = page_size or (
+        128 if jax.default_backend() == "tpu" else 16)
+    max_seq_len = max(max_seq_len, 4 * page_size)
+    cfg, model, params = built or _build(arch, smoke)
+
+    serve = ServeConfig(max_batch=max_batch, max_seq_len=max_seq_len,
+                        page_size=page_size,
+                        num_pages=max_batch * 3 + 1)   # undersized: churn
+    core = EngineCore(model, params, cfg, serve)
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(
+        rng.exponential(scale=mean_gap_steps, size=n_requests))).astype(int)
+    specs = []
+    for i in range(n_requests):
+        s = int(rng.integers(3, max_seq_len // 3))
+        n = int(rng.integers(4, max(5, (max_seq_len - s) // 2)))
+        if i % 3 == 2:                 # every 3rd request samples
+            sp = SamplingParams(temperature=0.8, top_k=8, seed=seed + i,
+                                max_new_tokens=n)
+        else:
+            sp = SamplingParams(max_new_tokens=n)
+        specs.append((rng.integers(0, cfg.vocab_size, size=s), sp))
+
+    # warmup: compile the decode step and every chunk-launch width the
+    # schedule may hit, then reset the serving state (jit caches stay)
+    widths, w = [], 1
+    while w < max_batch:
+        widths.append(w)
+        w *= 2
+    widths.append(max_batch)
+    wid = 0
+    for w in widths:
+        for i in range(w):
+            wid -= 1
+            core.add_request(rng.integers(0, cfg.vocab_size, size=3 + i),
+                             SamplingParams(max_new_tokens=2),
+                             request_id=wid)
+        while core.has_work:
+            core.step()
+    core.reset()
+
+    t_arrive, t_first, t_last, n_toks = {}, {}, {}, {}
+    next_req = 0
+    step_idx = 0
+    t0 = time.perf_counter()
+    while next_req < n_requests or core.has_work:
+        while next_req < n_requests and arrivals[next_req] <= step_idx:
+            prompt, sp = specs[next_req]
+            rid = core.add_request(prompt, sp, request_id=next_req)
+            t_arrive[rid] = time.perf_counter()
+            next_req += 1
+        for ev in core.step():
+            now = time.perf_counter()
+            t_first.setdefault(ev.request_id, now)
+            t_last[ev.request_id] = now
+            n_toks[ev.request_id] = n_toks.get(ev.request_id, 0) + 1
+        step_idx += 1
+    wall = time.perf_counter() - t0
+
+    assert len(t_first) == n_requests, "some request never produced"
+    assert core.mgr.used_pages == 0, "pages leaked after drain"
+    stats = core.stats()
+    assert stats["finished"] == n_requests
+
+    ttft = np.asarray([t_first[i] - t_arrive[i] for i in range(n_requests)])
+    tpot = np.asarray([(t_last[i] - t_first[i]) / (n_toks[i] - 1)
+                       for i in range(n_requests) if n_toks[i] > 1])
+    total_toks = sum(n_toks.values())
+    return {
+        "requests": n_requests,
+        "mean_gap_steps": mean_gap_steps,
+        "engine_steps": stats["steps"],
+        "generated_tokens": total_toks,
+        "sampled_requests": sum(1 for _, sp in specs if not sp.greedy),
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(total_toks / wall, 1),
+        "ttft_p50_s": round(float(np.percentile(ttft, 50)), 4),
+        "ttft_p99_s": round(float(np.percentile(ttft, 99)), 4),
+        "tpot_p50_s": round(float(np.percentile(tpot, 50)), 4),
+        "tpot_p99_s": round(float(np.percentile(tpot, 99)), 4),
+        "preemptions": stats["pressure"]["preemptions"],
+        "peak_utilization": round(stats["peak_utilization"], 3),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma2-2b")
@@ -397,6 +506,11 @@ def main():
     ap.add_argument("--skip-prefix", action="store_true",
                     help="skip the prefix-sharing section")
     ap.add_argument("--prefix-requests", type=int, default=6)
+    ap.add_argument("--skip-open-loop", action="store_true",
+                    help="skip the open-loop EngineCore section")
+    ap.add_argument("--open-loop-requests", type=int, default=10)
+    ap.add_argument("--mean-gap-steps", type=float, default=2.0,
+                    help="mean Poisson inter-arrival gap (engine steps)")
     ap.add_argument("--system-len", type=int, default=96,
                     help="shared system-prompt length (prefix section)")
     ap.add_argument("--preempt-policy", default="swap",
@@ -441,6 +555,14 @@ def main():
             arch=args.arch, n_requests=args.prefix_requests,
             system_len=args.system_len, page_size=args.page_size,
             seed=args.seed, smoke=not args.full)
+    if not args.skip_open_loop:
+        # requests arriving while the engine runs (EngineCore.step
+        # driven directly): frontend-visible TTFT/TPOT percentiles
+        report["open_loop"] = open_loop(
+            arch=args.arch, n_requests=args.open_loop_requests,
+            page_size=args.page_size,
+            mean_gap_steps=args.mean_gap_steps, seed=args.seed,
+            smoke=not args.full)
 
     def flat(prefix, d):
         for k, v in d.items():

@@ -1,5 +1,5 @@
 """Continuous-batching serving: paged KV cache, multi-tenant decode,
-chunked prefill, prefix sharing.
+chunked prefill, prefix sharing, and the persistent EngineCore.
 
 Six requests with different prompt and generation lengths share three
 decode slots and one page pool.  Tokens stream out per request the moment
@@ -15,6 +15,11 @@ The second section turns on the radix-tree prefix cache
 prompt reuse its cached KV pages copy-on-write instead of recomputing
 them -- warm requests prefill only ``prompt_len - matched_len`` tokens.
 
+The third section drives the ``EngineCore`` step API directly --
+``add_request`` (per-request SamplingParams, greedy and seeded
+sampling), ``step``, ``abort`` mid-flight -- which is what
+``generate_stream`` is a compatibility wrapper around.
+
     PYTHONPATH=src python examples/continuous_batching.py
 """
 import jax
@@ -23,8 +28,9 @@ import numpy as np
 from repro.config import ParallelConfig, ServeConfig, get_model_config, \
     reduce_for_smoke
 from repro.models import build_model
+from repro.serving.core import EngineCore
 from repro.serving.engine import ServeEngine
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import Request, SamplingParams
 
 # --- a tiny model (CPU smoke shapes; swap for a real config on TPU) --------
 cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
@@ -95,3 +101,37 @@ for name, requests in (("cold", wave(range(3), seed=1)),
 prefix = engine2.last_prefix
 print(f"radix index: {prefix.cached_pages} pages cached, "
       f"stats {prefix.stats}")
+
+# --- the step API: persistent core, mixed sampling, mid-flight abort --------
+# The engine above is a thin wrapper around this.  Requests arrive while
+# the engine runs (a frontend would do this from its accept loop), each
+# with its own SamplingParams -- the seeded request's tokens come from a
+# counter-based RNG stream, so they would be identical in any batch mix.
+print("\n--- EngineCore: add_request / step / abort ---")
+core = EngineCore(model, params, cfg,
+                  ServeConfig(max_batch=3, max_seq_len=96, page_size=16,
+                              prefill_chunk=16))
+greedy = SamplingParams(max_new_tokens=6)                   # temperature 0
+sampled = SamplingParams(temperature=0.8, top_k=8, seed=42,
+                         max_new_tokens=6)
+ids = [core.add_request(rng.integers(0, cfg.vocab_size, size=5), greedy),
+       core.add_request(rng.integers(0, cfg.vocab_size, size=60), greedy),
+       core.add_request(rng.integers(0, cfg.vocab_size, size=7), sampled)]
+for _ in range(2):
+    for ev in core.step():
+        print(f"  step {core.steps}: req {ev.request_id} "
+              f"token[{ev.index}] = {ev.token}")
+# the long prompt is still chunk-prefilling -- abort it mid-flight: its
+# pages return to the pool, nothing leaks, everyone else keeps going
+print(f"  abort req {ids[1]} (state "
+      f"{core.get_request(ids[1]).state}) -> {core.abort(ids[1])}")
+core.add_request(rng.integers(0, cfg.vocab_size, size=9),
+                 SamplingParams(max_new_tokens=4))          # mid-flight add
+while core.has_work:
+    for ev in core.step():
+        if ev.finished:
+            print(f"  req {ev.request_id} finished "
+                  f"({ev.index + 1} tokens)")
+s = core.stats()
+print(f"core: {s['steps']} steps, {s['events_emitted']} tokens, "
+      f"{s['aborts']} aborted, {s['pages_used']} pages still used")

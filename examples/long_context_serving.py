@@ -70,23 +70,26 @@ print("generated:", tokens.shape, tokens[0].tolist())
 # Optimistic admission runs them together; when the pool runs dry the
 # newest sequence's KV pages are swapped to the host page pool and
 # copied back when space frees up -- same tokens, ~half the device KV.
+# Requests carry their own (greedy) SamplingParams -- the supported
+# per-request path; the engine-global top_k/temperature knobs are
+# deprecated defaults.
 print("\n== page pressure: long prompt on an undersized pool (swap) ==")
-from repro.serving.scheduler import Request  # noqa: E402
+from repro.serving.scheduler import Request, SamplingParams  # noqa: E402
 
 cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
 model = build_model(cfg, ParallelConfig(remat="none"))
 params = model.init(jax.random.PRNGKey(0))
-serve = ServeConfig(max_batch=3, max_seq_len=96, top_k=1,
+serve = ServeConfig(max_batch=3, max_seq_len=96,
                     page_size=16, num_pages=10,
                     preempt_policy="swap", debug_invariants=True)
 engine = ServeEngine(model=model, params=params, cfg=cfg, serve=serve)
 rng = np.random.default_rng(0)
 reqs = [Request(id=0, prompt=rng.integers(0, cfg.vocab_size, size=72),
-                max_new_tokens=24),                  # 96-token worst case
+                sampling=SamplingParams(max_new_tokens=24)),  # 96-tok worst
         Request(id=1, prompt=rng.integers(0, cfg.vocab_size, size=8),
-                max_new_tokens=64),
+                sampling=SamplingParams(max_new_tokens=64)),
         Request(id=2, prompt=rng.integers(0, cfg.vocab_size, size=6),
-                max_new_tokens=80)]
+                sampling=SamplingParams(max_new_tokens=80))]
 for ev in engine.generate_stream(reqs):
     if ev.finished:
         print(f"req {ev.request_id}: {len(reqs[ev.request_id].generated)} "

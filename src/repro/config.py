@@ -228,8 +228,14 @@ class TrainConfig:
 class ServeConfig:
     max_batch: int = 8
     max_seq_len: int = 4096
+    # DEPRECATED engine-global sampling knobs: requests carry their own
+    # frozen SamplingParams (serving/scheduler.py) with a counter-based
+    # per-request RNG stream.  These fields survive only as the defaults
+    # for requests submitted without params (the EngineCore warns once
+    # per core when they were changed from these values) and for the
+    # dense ServeEngine.generate path.
     temperature: float = 1.0
-    top_k: int = 0                 # 0 = greedy
+    top_k: int = 0                 # 0 = no truncation (1 = greedy)
     seed: int = 0
 
     # --- paged KV + continuous batching (ServeEngine.generate_stream) ---
@@ -297,6 +303,13 @@ class ServeConfig:
     # 0 = unbounded -- the pool itself is the bound, with leaves
     # reclaimed whenever the free list runs low.
     prefix_cache_pages: int = 0
+
+    @property
+    def sampling_overridden(self) -> bool:
+        """True when the deprecated engine-global sampling knobs were
+        changed from their defaults -- the EngineCore warns (once) only
+        when a params-less request actually inherits such a change."""
+        return (self.temperature, self.top_k) != (1.0, 0)
 
     @property
     def watermark(self) -> int:

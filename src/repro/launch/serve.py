@@ -1,7 +1,14 @@
-"""Serving driver: batched generation with FastAttention (+T4 offload).
+"""Serving driver: batched generation with FastAttention (+T4 offload),
+or the persistent paged EngineCore (``--stream``).
 
+    # dense static-batch generation (the original path)
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
         --batch 4 --prompt-len 64 --gen 16
+
+    # iteration-level serving: EngineCore.add_request/step with
+    # per-request SamplingParams (every 3rd request samples, seeded)
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+        --stream --requests 8 --prompt-len 24 --gen 12
 """
 from __future__ import annotations
 
@@ -10,14 +17,56 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import (ParallelConfig, ServeConfig, get_model_config,
                           reduce_for_smoke)
 from repro.core.offload import OffloadLatencyModel, plan_offload
 from repro.launch.mesh import make_mesh_for
 from repro.models import build_model
+from repro.serving.core import EngineCore
 from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import SamplingParams
 from repro.sharding.rules import axis_rules
+
+
+def _run_stream(model, params, cfg, args) -> None:
+    """Drive the persistent EngineCore directly: submit a queue of
+    requests with mixed per-request SamplingParams, step the engine,
+    and print tokens as they stream out."""
+    page_size = 128 if jax.default_backend() == "tpu" else 16
+    serve = ServeConfig(
+        max_batch=min(4, args.requests),
+        max_seq_len=args.prompt_len + args.gen + page_size,
+        page_size=page_size)
+    core = EngineCore(model, params, cfg, serve)
+    rng = np.random.default_rng(0)
+    # --top-k 1 (the dense-path greedy default) would make the "sampled"
+    # requests greedy too; give them a real truncation instead
+    stream_top_k = args.top_k if args.top_k not in (0, 1) else 8
+    for i in range(args.requests):
+        if i % 3 == 2:
+            sp = SamplingParams(temperature=0.8, top_k=stream_top_k,
+                                seed=i, max_new_tokens=args.gen)
+        else:
+            sp = SamplingParams(max_new_tokens=args.gen)   # greedy
+        core.add_request(rng.integers(0, cfg.vocab_size,
+                                      size=args.prompt_len), sp)
+    t0 = time.perf_counter()
+    n_events = 0
+    while core.has_work:
+        for ev in core.step():
+            n_events += 1
+            if ev.finished:
+                print(f"req {ev.request_id} finished "
+                      f"({ev.index + 1} tokens)")
+    dt = time.perf_counter() - t0
+    s = core.stats()
+    print(f"{n_events} tokens in {dt:.2f}s ({n_events / dt:.1f} tok/s), "
+          f"{s['steps']} engine steps, peak pool "
+          f"{s['pages_peak']}/{core.mgr.usable_pages} pages "
+          f"({s['peak_utilization']:.0%}), "
+          f"{s['pressure']['preemptions']} preemptions")
 
 
 def main(argv=None):
@@ -29,6 +78,11 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--top-k", type=int, default=1)
     ap.add_argument("--offload-report", action="store_true")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve through the paged EngineCore "
+                         "(add_request/step) instead of dense generate")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests to stream (with --stream)")
     args = ap.parse_args(argv)
 
     cfg = get_model_config(args.arch)
@@ -46,6 +100,9 @@ def main(argv=None):
 
     with axis_rules(mesh=mesh):
         params = model.init(jax.random.PRNGKey(0))
+        if args.stream:
+            _run_stream(model, params, cfg, args)
+            return
         serve = ServeConfig(max_seq_len=args.prompt_len + args.gen + 1,
                             top_k=args.top_k)
         engine = ServeEngine(model=model, params=params, cfg=cfg,

@@ -1,0 +1,579 @@
+"""EngineCore: the persistent, iteration-level serving engine.
+
+vLLM's ``LLMEngine.add_request``/``step`` and FlashInfer's decoupled
+plan/run interface expose the same shape: a *core* that owns all serving
+state -- page manager, scheduler, pressure manager, radix prefix index,
+device page pools, jitted paged functions -- and advances the whole
+system exactly one iteration per ``step()`` call.  Frontends, arrival
+processes and multi-tenant policies then compose on top, and features
+that need a step boundary to hook into (overlapped swap, multi-host
+decode) have one.
+
+    core = EngineCore(model=model, params=params, cfg=cfg, serve=serve)
+    rid = core.add_request(prompt, SamplingParams(max_new_tokens=32))
+    while core.has_work:
+        for ev in core.step():          # list[StreamEvent], may be empty
+            ...
+    core.abort(rid)                     # any time: frees pages, no leaks
+
+Everything persists across requests unconditionally -- the prefix-cache-
+only ``_shared_state`` special case of the previous ``ServeEngine`` is
+gone: abandoning a stream is now a plain ``abort()`` (free the slot's
+pages, cancel its copy-on-write debts, drop any swap stash; shared
+prefix pages just lose one reference).
+
+Sampling is per request (``SamplingParams``) with a counter-based RNG:
+the key for a request's n-th sampled token is
+``fold_in(PRNGKey(params.seed), n)``, so sampled tokens are invariant to
+batch composition, co-tenants, preemption and admission order.  The
+engine-global ``ServeConfig.temperature/top_k`` knobs survive only as
+deprecated defaults for requests submitted without params.
+
+``ServeEngine.generate_stream`` is a thin compatibility wrapper over
+this class (submit, drain ``step()``, abort leftovers on close) -- its
+greedy output is bit-identical to the pre-core engine.
+"""
+from __future__ import annotations
+
+import warnings
+from collections import deque
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ServeConfig
+from repro.core.fastattention import default_paged_impl
+from repro.serving.paged_cache import OutOfPages, PagedKVCache
+from repro.serving.prefix_cache import RadixPrefixIndex
+from repro.serving.pressure import PressureManager, copy_pages
+from repro.serving.scheduler import (ABORTED, FINISHED, PREFILLING, RUNNING,
+                                     ContinuousBatchScheduler, Request,
+                                     SamplingParams)
+
+
+def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
+    if temperature == 0.0 or top_k == 1:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k > 1:
+        # lax.top_k rejects k > vocab; clamping makes oversized k mean
+        # "no truncation" instead of a crash
+        k = min(top_k, lf.shape[-1])
+        vals, _ = jax.lax.top_k(lf, k)
+        thresh = vals[..., -1:]
+        lf = jnp.where(lf < thresh, -1e30, lf)
+    return jax.random.categorical(key, lf).astype(jnp.int32)
+
+
+class StreamEvent(NamedTuple):
+    """One generated token, emitted the step it exists."""
+    request_id: int
+    token: int
+    index: int            # position within the request's generation
+    finished: bool        # True on the request's last token
+
+
+class EngineCore:
+    """Persistent iteration-level engine over the paged KV cache.
+
+    One ``step()`` = retire finished sequences, admit waiting/resuming
+    requests, spend the prefill token budget on chunked prompt prefill,
+    run one fused decode step for every RUNNING slot, and return the
+    tokens produced.  All state lives on the core and survives between
+    calls -- including the device page pools, so prefix-cache hits keep
+    their KV across requests.
+    """
+
+    def __init__(self, model, params, cfg: ModelConfig,
+                 serve: Optional[ServeConfig] = None, *,
+                 fn_cache: Optional[dict] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.serve = serve or ServeConfig()
+        # jitted paged prefill/decode triples keyed by resolved impl;
+        # shared with the ServeEngine wrapper so clearing one clears both
+        self._paged_fn_cache = fn_cache if fn_cache is not None else {}
+        # how many times the chunked-prefill function was *traced* (not
+        # called): the trace-count test asserts it stays bounded by
+        # launch widths no matter how many prompt lengths stream through
+        self.prefill_trace_count = 0
+        # prefill chunk *launches* (calls, not traces): prefix-cache hits
+        # skip the matched prefix's launches entirely, asserted in tests
+        self.prefill_launches = 0
+        self._warned_legacy_sampling = False
+        self._next_id = 0
+        self.reset()
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def reset(self) -> None:
+        """Drop every request, page, stash and cached prefix and rebuild
+        the serving state from ``self.serve``.  Jit caches and trace
+        counters survive (they are keyed by shapes, not state)."""
+        serve = self.serve
+        self.mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
+                                serve.max_batch, serve.max_pages_per_seq)
+        self.prefix = (RadixPrefixIndex(self.mgr, serve.page_size,
+                                        serve.prefix_cache_pages)
+                       if serve.prefix_cache else None)
+        self.sched = ContinuousBatchScheduler(
+            self.mgr, serve.max_batch, admission=serve.admission,
+            watermark_pages=serve.watermark, prefix_cache=self.prefix)
+        self.pressure = PressureManager(self.cfg, serve, self.mgr,
+                                        self.sched,
+                                        prefix_cache=self.prefix)
+        self.pools = None              # device pools, materialised lazily
+        self.next_tok = np.zeros((serve.max_batch,), np.int32)
+        self.requests: Dict[int, Request] = {}     # live (unfinished) only
+        # events a generate_stream drain stepped out for requests no
+        # drain owns (direct add_request users): step() hands each event
+        # to exactly one caller, so mixed-mode users recover them here
+        self.orphan_events: deque = deque(maxlen=4096)
+        self.steps = 0
+        self.events_emitted = 0
+        self.aborts = 0
+
+    @property
+    def has_work(self) -> bool:
+        return self.sched.has_work
+
+    def stats(self) -> dict:
+        """Point-in-time engine statistics (live objects, not a log)."""
+        mgr, sched = self.mgr, self.sched
+        out = {
+            "steps": self.steps,
+            "events_emitted": self.events_emitted,
+            "aborts": self.aborts,
+            "waiting": len(sched.waiting),
+            "resuming": len(sched.resuming),
+            "active_slots": sum(1 for r in sched.slots if r is not None),
+            "finished": sched.finished_count,
+            "pages_used": mgr.used_pages,
+            "pages_free": mgr.free_pages,
+            "pages_peak": mgr.peak_used_pages,
+            "peak_utilization": mgr.peak_utilization,
+            "prefill_launches": self.prefill_launches,
+            "prefill_trace_count": self.prefill_trace_count,
+            "pressure": dict(self.pressure.stats),
+            "host_pool_pages": self.pressure.host_pool.used_pages,
+        }
+        if self.prefix is not None:
+            out["prefix"] = dict(self.prefix.stats)
+            out["prefix_cached_pages"] = self.prefix.cached_pages
+        return out
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+    def _resolve_sampling(self, req: Request, seed_offset: int = 0) -> None:
+        """Give a params-less request its SamplingParams from the
+        deprecated engine-global knobs (warning once per core when they
+        were actually changed from their defaults).  The legacy seed
+        folds in the request id so co-scheduled legacy requests do not
+        sample identical streams."""
+        if req.sampling is not None:
+            return
+        serve = self.serve
+        if serve.sampling_overridden and not self._warned_legacy_sampling:
+            self._warned_legacy_sampling = True
+            warnings.warn(
+                "engine-global ServeConfig.temperature/top_k are "
+                "deprecated: pass SamplingParams per request "
+                "(Request(sampling=...) or EngineCore.add_request)",
+                DeprecationWarning, stacklevel=4)
+        req.sampling = SamplingParams(
+            temperature=serve.temperature, top_k=serve.top_k,
+            seed=serve.seed + seed_offset + int(req.id),
+            max_new_tokens=req.max_new_tokens,
+            stop_token_ids=(req.eos_id,) if req.eos_id is not None else ())
+
+    def submit_request(self, req: Request, *, seed_offset: int = 0
+                       ) -> Request:
+        """Validate and enqueue a pre-built ``Request`` (the
+        generate_stream compatibility path).  Raises ValueError when the
+        request can never fit the pool or its id collides with a live
+        request."""
+        live = self.requests.get(req.id)
+        if live is not None and live.state not in (FINISHED, ABORTED):
+            raise ValueError(f"request id {req.id} is already live")
+        self._resolve_sampling(req, seed_offset)
+        self.sched.submit(req)          # validates against the pool
+        self.requests[req.id] = req
+        return req
+
+    def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
+                    *, request_id: Optional[int] = None,
+                    max_new_tokens: Optional[int] = None,
+                    eos_id: Optional[int] = None) -> int:
+        """Submit a new generation request; returns its id.  ``prompt``
+        is a 1-D sequence of token ids.  Without ``sampling`` the
+        default greedy ``SamplingParams()`` applies (the aliases fold
+        into it) -- the new API never inherits the deprecated
+        engine-global knobs; only Requests submitted through
+        ``generate_stream`` without params do.  The request queues FIFO
+        and is admitted by a later ``step()``."""
+        if sampling is None:
+            sampling = SamplingParams()
+        rid = request_id
+        if rid is None:
+            while self._next_id in self.requests:
+                self._next_id += 1
+            rid = self._next_id
+            self._next_id += 1
+        req = Request(id=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+                      eos_id=eos_id, sampling=sampling)
+        self.submit_request(req)
+        return rid
+
+    def get_request(self, request_id: int) -> Optional[Request]:
+        return self.requests.get(request_id)
+
+    def abort(self, request_id: int) -> bool:
+        """Cancel a request anywhere in its lifecycle: waiting, resuming
+        (its host swap stash is dropped), mid-prefill or mid-decode (its
+        slot's pages are freed -- shared prefix pages just decref -- and
+        its pending COW debts die with it).  Returns False for an
+        unknown or already-finished id.  Idempotent."""
+        req = self.sched.abort(request_id)
+        if req is None:
+            return False
+        if self.pressure.holds(request_id):
+            self.pressure.drop(request_id, reason="abort")
+        self.requests.pop(request_id, None)
+        self.aborts += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # jitted paged functions
+    # ------------------------------------------------------------------
+    def _paged_impl(self) -> str:
+        if self.serve.paged_impl == "auto":
+            return default_paged_impl()
+        return self.serve.paged_impl
+
+    def _paged_fns(self):
+        """Jitted paged fns keyed on the resolved impl so a serve-config
+        change after first use is honoured: (scan prefill, chunked
+        prefill, fused decode step).  The scan prefill retraces once per
+        distinct prompt length (that is why it is the legacy path); the
+        chunked prefill traces once per launch width -- chunk shape,
+        page-table width and position offsets are all runtime values."""
+        impl = self._paged_impl()
+        if (impl == "paged" and jax.default_backend() == "tpu"
+                and self.serve.page_size % 128):
+            raise ValueError(
+                f"page_size={self.serve.page_size} must be a multiple of "
+                "128 (TPU lane width) for the compiled Pallas paged "
+                "kernel; pick a 128-multiple or paged_impl="
+                "'paged_reference'")
+        if impl not in self._paged_fn_cache:
+            model = self.model
+            core = self
+
+            def dec(params, tok, pools, table, pos):
+                return model.decode_step_paged(params, tok, pools, table,
+                                               pos, impl=impl)
+
+            def pre_scan(params, prompt, pools, table_row, pos0):
+                # pos0: (1,) int32 runtime offset -- a prefix-cache hit
+                # scans only the uncached prompt tail from matched_len
+                s = prompt.shape[1]
+
+                def step(c, t):
+                    lg, c = model.decode_step_paged(
+                        params, prompt[:, t], c, table_row,
+                        pos0 + t.astype(jnp.int32), impl=impl)
+                    return c, lg
+
+                pools, lgs = jax.lax.scan(step, pools, jnp.arange(s))
+                return pools, lgs[-1]
+
+            def pre_chunk(params, chunk, pools, table_row, pos_start,
+                          n_valid):
+                core.prefill_trace_count += 1      # host-side, trace-time
+                logits, pools = model.prefill_chunk_paged(
+                    params, chunk, pools, table_row, pos_start, n_valid,
+                    impl=impl)
+                # the chunk's last *valid* row: only meaningful logits --
+                # padding rows attended through the scratch page
+                last = jnp.take_along_axis(
+                    logits, jnp.maximum(n_valid - 1, 0)[:, None, None],
+                    axis=1)[:, 0]
+                return pools, last
+
+            self._paged_fn_cache[impl] = (
+                jax.jit(pre_scan, donate_argnums=(2,)),
+                jax.jit(pre_chunk, donate_argnums=(2,)),
+                jax.jit(dec, donate_argnums=(2,)))
+        return self._paged_fn_cache[impl]
+
+    # ------------------------------------------------------------------
+    # sampling (per-request counter-based RNG)
+    # ------------------------------------------------------------------
+    def _sample(self, req: Request, logits_row) -> int:
+        """Sample the request's next token from its own RNG stream:
+        key = fold_in(PRNGKey(seed), token_index).  Greedy requests take
+        the argmax (no key consumed), so greedy output is bit-identical
+        whatever else shares the batch."""
+        sp = req.sampling
+        if sp.greedy:
+            return int(np.asarray(
+                jnp.argmax(logits_row, axis=-1)).ravel()[0])
+        key = jax.random.fold_in(jax.random.PRNGKey(sp.seed),
+                                 len(req.generated))
+        tok = sample_token(jnp.atleast_2d(logits_row), key,
+                           temperature=sp.temperature, top_k=sp.top_k)
+        return int(np.asarray(tok).ravel()[0])
+
+    def _first_token(self, req: Request, slot: int,
+                     last_logits) -> StreamEvent:
+        """Sample a freshly-prefilled sequence's first token and flip the
+        request into the decoding state."""
+        req.state = RUNNING
+        tok = self._sample(req, last_logits)
+        req.generated.append(tok)
+        self.next_tok[slot] = tok
+        return StreamEvent(req.id, tok, 0, req.done)
+
+    # ------------------------------------------------------------------
+    # page plumbing
+    # ------------------------------------------------------------------
+    def _ensure_pools(self) -> None:
+        if self.pools is None:
+            self.pools = self.model.init_paged_cache(self.mgr.num_pages,
+                                                     self.mgr.page_size)
+
+    def _apply_cow(self) -> None:
+        """Replay pending copy-on-write page moves on the device pools:
+        the host manager already rewired the page table, the contents
+        must follow before the next launch reads or writes the copy."""
+        mgr = self.mgr
+        if not mgr.cow_pending:
+            return
+        pairs, mgr.cow_pending = mgr.cow_pending, []
+        self.pools = copy_pages(self.pools, [s for s, _ in pairs],
+                                [d for _, d in pairs])
+
+    def _grow(self, slot: int, n: int) -> None:
+        """``mgr.append(slot, n)`` with page-pressure relief: on
+        OutOfPages, reclaim prefix-cache leaves or evict the newest-
+        admitted other sequence (swap or recompute) and retry.
+        Terminates because submit-time validation guarantees any single
+        request fits the pool alone.  Applies any resulting
+        copy-on-write page copies to the device pools."""
+        while True:
+            try:
+                self.mgr.append(slot, n)
+                self._apply_cow()
+                return
+            except OutOfPages:
+                self.pressure.relieve(self.pools, protect=slot)
+
+    @staticmethod
+    def _prefill_groups(jobs, width: int):
+        """Pack this step's prefill jobs into batched launches: first-fit
+        into the earliest group that has room and no job for the same
+        slot yet (a slot's chunk k+1 must launch after its chunk k; the
+        first-fit order preserves that).  Distinct sequences' chunks ride
+        one ``prefill_chunk_paged`` call instead of one launch each."""
+        groups: list = []
+        for job in jobs:
+            slot = job[0]
+            for g in groups:
+                if len(g) < width and all(j[0] != slot for j in g):
+                    g.append(job)
+                    break
+            else:
+                groups.append([job])
+        return groups
+
+    def _resume_decode(self, req: Request, slot: int) -> None:
+        """Flip a resumed sequence whose prefill state is fully restored
+        back into decode: its next input token was already sampled before
+        the preemption, so nothing is emitted here."""
+        req.state = RUNNING
+        self.next_tok[slot] = req.generated[-1]
+
+    def _check_invariants(self) -> None:
+        self.mgr.check_invariants(
+            extern_refs=self.prefix.page_refs() if self.prefix else None)
+
+    # ------------------------------------------------------------------
+    # the step
+    # ------------------------------------------------------------------
+    def step(self) -> List[StreamEvent]:
+        """Advance the engine one iteration and return the tokens it
+        produced (possibly none: a step may be all prefill, or idle).
+        Event order within a step: first tokens of sequences whose
+        prefill completed, then one decode token per running slot."""
+        events: List[StreamEvent] = []
+        sched, mgr, serve = self.sched, self.mgr, self.serve
+        if not sched.has_work:
+            return events
+        self.steps += 1
+        ps = mgr.page_size
+        self._ensure_pools()
+        pre_scan, pre_chunk, decode = self._paged_fns()
+
+        for req in sched.retire():
+            self.requests.pop(req.id, None)
+        admitted = sched.admit()
+        # RESUMING path: swap-preempted requests re-admitted by the
+        # scheduler get their stashed KV copied back into the pages
+        # admission just materialised (their shared prefix was re-shared
+        # from the index); a sequence that was decoding when evicted
+        # rejoins the decode batch directly (its next input token was
+        # sampled before the preemption).  A stash whose resume was
+        # downgraded to recompute is dropped.
+        for slot, req in admitted:
+            if self.pressure.holds(req.id):
+                if req.resume_kind == "swap":
+                    self.pools = self.pressure.restore(self.pools, slot,
+                                                       req)
+                else:
+                    self.pressure.drop(req.id)
+            if req.state == RUNNING:
+                self.next_tok[slot] = req.generated[-1]
+        if not admitted and not sched.running():
+            if not sched.waiting and not sched.resuming:
+                return events           # everything retired
+            # submit-time validation guarantees the head of either queue
+            # fits an empty pool (the watermark is waived when no slot is
+            # occupied); kept as a cheap tripwire
+            req = (sched.resuming or sched.waiting)[0]
+            raise RuntimeError(
+                f"pool too small for request {req.id}: needs "
+                f"{-(-req.target_len // ps)} pages, pool has "
+                f"{mgr.num_pages - 1}")
+        if serve.debug_invariants:
+            self._check_invariants()
+
+        # ---- prefill phase -------------------------------------------
+        chunk = serve.prefill_chunk_tokens
+        budget = serve.prefill_budget_tokens
+        if serve.prefill_mode == "scan":
+            # legacy: the whole uncached (re)prefill tail at once, one
+            # token per scan step, retraced per length (equivalence
+            # oracle); a prefix-cache hit starts the scan at matched_len
+            # over the shared pages
+            for slot, req in admitted:
+                if sched.slots[slot] is not req \
+                        or req.state != PREFILLING:
+                    continue            # preempted again, or swap-resumed
+                start = req.prefilled
+                toks = req.prefill_tokens[start:]
+                self._grow(slot, len(toks))
+                self.pools, last_logits = pre_scan(
+                    self.params, jnp.asarray(toks[None]), self.pools,
+                    jnp.asarray(mgr.device_row(slot)),
+                    jnp.full((1,), start, jnp.int32))
+                req.prefilled = start + len(toks)
+                if req.generated:
+                    self._resume_decode(req, slot)
+                else:
+                    events.append(self._first_token(req, slot,
+                                                    last_logits))
+        else:
+            # chunked: fixed-size chunks through the full forward, jobs
+            # for distinct sequences batched into one launch, padded to
+            # the next power-of-two row count (a lone prefilling prompt
+            # stays a 1-row launch; traces stay bounded by
+            # log2(max_batch)+1 widths, never by prompt length)
+            width = serve.max_batch
+            for group in self._prefill_groups(
+                    sched.prefill_schedule(budget, chunk), width):
+                live = []
+                for slot, req, start, n in group:
+                    if sched.slots[slot] is not req \
+                            or req.state != PREFILLING:
+                        continue        # victim of an earlier _grow
+                    self._grow(slot, n)
+                    live.append((slot, req, start, n))
+                # _grow may have evicted an earlier group member
+                live = [(s, r, st, n) for s, r, st, n in live
+                        if sched.slots[s] is r]
+                if not live:
+                    continue
+                bw = 1
+                while bw < len(live):
+                    bw *= 2
+                bw = min(bw, width)
+                buf = np.zeros((bw, chunk), np.int32)
+                table = np.full((bw, mgr.max_pages_per_seq),
+                                mgr.SCRATCH, np.int32)
+                pos0 = np.zeros((bw,), np.int32)
+                nval = np.zeros((bw,), np.int32)
+                for i, (slot, req, start, n) in enumerate(live):
+                    buf[i, :n] = req.prefill_tokens[start:start + n]
+                    table[i] = mgr.table[slot]
+                    pos0[i] = start
+                    nval[i] = n
+                self.prefill_launches += 1
+                self.pools, last_logits = pre_chunk(
+                    self.params, jnp.asarray(buf), self.pools,
+                    jnp.asarray(table), jnp.asarray(pos0),
+                    jnp.asarray(nval))
+                for i, (slot, req, start, n) in enumerate(live):
+                    req.prefilled = start + n
+                    if not req.prefill_done:
+                        continue
+                    if req.generated:   # recompute-resume finished
+                        self._resume_decode(req, slot)
+                    else:
+                        events.append(self._first_token(
+                            req, slot, last_logits[i:i + 1]))
+
+        # ---- decode phase --------------------------------------------
+        cand = [(s, r) for s, r in sched.decoding() if not r.done]
+        # materialise the page (maybe a fresh one) every running
+        # sequence's next token will be written to -- evicting other
+        # sequences under pressure -- THEN snapshot the table for the
+        # device step.
+        for slot, req in cand:
+            if sched.slots[slot] is not req:
+                continue                # evicted by an earlier _grow
+            self._grow(slot, 1)
+        running = [(s, r) for s, r in cand if sched.slots[s] is r]
+        if serve.debug_invariants:
+            self._check_invariants()
+        if not running:
+            self.events_emitted += len(events)
+            return events
+        pos_np = np.zeros((serve.max_batch,), np.int32)
+        for slot, _ in running:
+            pos_np[slot] = mgr.seq_len(slot) - 1
+        table = mgr.device_table()
+        for slot, _ in sched.prefilling():
+            # mid-prefill slots sit out the decode step: scratch-page
+            # table row + pos 0, like idle slots (their real pages must
+            # not see the decode step's writes)
+            table[slot, :] = mgr.SCRATCH
+        logits, self.pools = decode(
+            self.params, jnp.asarray(self.next_tok), self.pools,
+            jnp.asarray(table), jnp.asarray(pos_np))
+        if all(r.sampling.greedy for _, r in running):
+            # one batched argmax: the common all-greedy step costs one
+            # device op, and matches the pre-core engine bit for bit
+            toks = np.asarray(jnp.argmax(logits, axis=-1)
+                              .astype(jnp.int32))
+            picked = {slot: int(toks[slot]) for slot, _ in running}
+        else:
+            # mixed sampling: one host sync, then per-row eager sampling
+            # -- O(batch) small dispatches per step, acceptable at the
+            # decode batch widths served here; a batched vmapped sampler
+            # keyed on (temperature, top_k) groups is the upgrade path
+            logits_np = np.asarray(logits)
+            picked = {slot: self._sample(req, logits_np[slot])
+                      for slot, req in running}
+        for slot, req in running:
+            tok = picked[slot]
+            req.generated.append(tok)
+            self.next_tok[slot] = tok
+            events.append(StreamEvent(req.id, tok,
+                                      len(req.generated) - 1, req.done))
+        self.events_emitted += len(events)
+        return events

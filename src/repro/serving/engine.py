@@ -1,62 +1,81 @@
-"""Serving engine: prefill + decode loop with greedy/top-k sampling and
-optional T4 host offload of the KV cache.
+"""Serving engine: dense prefill+decode, and the paged streaming shim.
 
-Prefill fills the cache by teacher-forcing the prompt through decode steps
-in a scanned loop (exactly matches the training forward -- verified by the
-decode-vs-prefill consistency tests); with `chunked_prefill` the prompt is
-instead processed in chunks through the full forward using q_offset, the
-paper-faithful fast path.
+The dense path (``prefill``/``generate``) teacher-forces the prompt
+through decode steps in a scanned loop and is unchanged from the early
+PRs -- it remains the oracle the paged path is tested against.
 
-``generate_stream`` is the multi-tenant path: paged KV cache + continuous
-batching.  Sequences share global page pools, a host-side scheduler admits
-and retires requests every step, and tokens stream out per request as they
-are produced -- no sequence waits for the batch.  Prompts are prefilled in
-fixed ``prefill_chunk`` token chunks through the full transformer forward
-(the paper's tiled prefill kernel with runtime q offsets) interleaved with
-decode steps under a ``prefill_token_budget``, so a long newcomer never
-stalls the tokens of running sequences and time-to-first-token is
-O(prompt/chunk) kernel launches instead of O(prompt) decode steps.
+The multi-tenant paged path now lives in :mod:`repro.serving.core`:
+``EngineCore`` is a *persistent* iteration-level engine
+(``add_request``/``step``/``abort``/``reset``/``stats``) owning the page
+manager, scheduler, pressure manager, radix prefix index, device pools
+and jitted functions across calls.  ``ServeEngine.generate_stream`` is
+kept as a thin compatibility wrapper: it submits the batch of requests
+to the engine's core, drains ``step()`` while any of them is live, and
+aborts the leftovers when the caller abandons the generator -- greedy
+output is bit-identical to the pre-core engine.  New code should drive
+``ServeEngine.core`` (or an ``EngineCore`` directly) and pass
+``SamplingParams`` per request.
 """
 from __future__ import annotations
 
-import functools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Iterable, NamedTuple, Optional
+from typing import Iterable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig, ParallelConfig, ServeConfig
-from repro.core.fastattention import default_paged_impl
-from repro.core.offload import HostOffloadEngine, OffloadPlan, plan_offload
-from repro.serving.paged_cache import OutOfPages, PagedKVCache
-from repro.serving.prefix_cache import RadixPrefixIndex
-from repro.serving.pressure import PressureManager, copy_pages
-from repro.serving.scheduler import (PREFILLING, RUNNING,
-                                     ContinuousBatchScheduler, Request)
+from repro.config import ModelConfig, ServeConfig
+from repro.core.offload import HostOffloadEngine
+# Re-exported for backward compatibility: these used to be defined here.
+from repro.serving.core import EngineCore, StreamEvent, sample_token  # noqa: F401
+from repro.serving.scheduler import (ABORTED, FINISHED, Request,
+                                     SamplingParams)  # noqa: F401
 
 
-def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
-    if temperature == 0.0 or top_k == 1:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
-    if top_k > 1:
-        # lax.top_k rejects k > vocab; clamping makes oversized k mean
-        # "no truncation" instead of a crash
-        k = min(top_k, lf.shape[-1])
-        vals, _ = jax.lax.top_k(lf, k)
-        thresh = vals[..., -1:]
-        lf = jnp.where(lf < thresh, -1e30, lf)
-    return jax.random.categorical(key, lf).astype(jnp.int32)
+class _StreamDrain:
+    """Iterator over one generate_stream call's events.  A plain
+    generator's ``finally`` never runs when the generator is dropped
+    before its first ``next()`` -- but this call's requests are already
+    queued on the persistent core and its routing entry registered, so
+    cleanup (unregister, abort leftovers) must run regardless.  This
+    wrapper guarantees it via ``close()``/``__del__``."""
+
+    def __init__(self, gen, cleanup):
+        self._gen = gen
+        self._cleanup = cleanup
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return next(self._gen)
+
+    def close(self):
+        try:
+            self._gen.close()
+        finally:
+            self._cleanup()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
 
 
-class StreamEvent(NamedTuple):
-    """One generated token, streamed as soon as it exists."""
-    request_id: int
-    token: int
-    index: int            # position within the request's generation
-    finished: bool        # True on the request's last token
+def _seed_offset(key) -> int:
+    """Legacy ``generate_stream(key=...)`` support: per-request counter
+    RNG supersedes the stream-global key, which now only offsets the
+    seeds derived for requests submitted without SamplingParams."""
+    if key is None:
+        return 0
+    try:
+        data = jax.random.key_data(key)
+    except (AttributeError, TypeError):
+        data = key
+    return int(np.asarray(data).ravel()[-1])
 
 
 @dataclass
@@ -66,26 +85,72 @@ class ServeEngine:
     cfg: ModelConfig
     serve: ServeConfig = field(default_factory=ServeConfig)
     offload: Optional[HostOffloadEngine] = None
-    # jitted paged prefill/decode triples keyed by resolved paged impl
+    # jitted paged prefill/decode triples keyed by resolved paged impl;
+    # the same dict object backs the core, so tests clearing it force a
+    # retrace through both
     _paged_fn_cache: dict = field(default_factory=dict, repr=False)
-    # paged state persisted across generate_stream calls when the prefix
-    # cache is on: [PagedKVCache, RadixPrefixIndex, device pools] -- the
-    # index's pages (and their contents) must outlive any single stream
-    # for cross-request KV reuse to exist
-    _shared_state: Optional[list] = field(default=None, repr=False)
+    _core: Optional[EngineCore] = field(default=None, repr=False)
+    # live generate_stream drains: (id set, event buffer) per call, so
+    # interleaved streams on the one shared core route -- not drop --
+    # each other's tokens
+    _stream_subs: list = field(default_factory=list, repr=False)
 
     def __post_init__(self):
         self._decode = jax.jit(
             lambda p, t, c, pos: self.model.decode_step(p, t, c, pos),
             donate_argnums=(2,))   # KV cache updated in place
-        # how many times the chunked-prefill function was *traced* (not
-        # called): the trace-count test asserts it stays at 1 no matter
-        # how many prompt lengths stream through
-        self.prefill_trace_count = 0
-        # prefill chunk *launches* (calls, not traces): prefix-cache hits
-        # skip the matched prefix's launches entirely, asserted in tests
-        self.prefill_launches = 0
 
+    # ------------------------------------------------------------------
+    # the persistent core (paged serving state lives there)
+    # ------------------------------------------------------------------
+    @property
+    def core(self) -> EngineCore:
+        """The engine's persistent ``EngineCore`` (created on first
+        use).  Page manager, scheduler, pressure manager, prefix index,
+        device pools and jit caches all live on it, across calls."""
+        if self._core is None:
+            self._core = EngineCore(self.model, self.params, self.cfg,
+                                    self.serve,
+                                    fn_cache=self._paged_fn_cache)
+        return self._core
+
+    # Back-compat observability aliases: benchmarks/tests read these off
+    # the engine after (or during) a stream.  They now resolve to the
+    # persistent core's live objects.
+    @property
+    def last_cache(self):
+        return self.core.mgr
+
+    @property
+    def last_scheduler(self):
+        return self.core.sched
+
+    @property
+    def last_pressure(self):
+        return self.core.pressure
+
+    @property
+    def last_prefix(self):
+        return self.core.prefix
+
+    @property
+    def prefill_launches(self) -> int:
+        return self.core.prefill_launches
+
+    @prefill_launches.setter
+    def prefill_launches(self, value: int) -> None:
+        self.core.prefill_launches = value
+
+    @property
+    def prefill_trace_count(self) -> int:
+        return self.core.prefill_trace_count
+
+    @prefill_trace_count.setter
+    def prefill_trace_count(self, value: int) -> None:
+        self.core.prefill_trace_count = value
+
+    # ------------------------------------------------------------------
+    # dense (static-batch) path
     # ------------------------------------------------------------------
     def prefill(self, tokens: jax.Array):
         """tokens: (B, S_prompt).  Returns (cache, last_logits)."""
@@ -122,360 +187,82 @@ class ServeEngine:
         return jnp.stack(out, axis=1)
 
     # ------------------------------------------------------------------
-    # paged KV + continuous batching
+    # paged KV + continuous batching (compatibility shim over EngineCore)
     # ------------------------------------------------------------------
-    def _paged_impl(self) -> str:
-        if self.serve.paged_impl == "auto":
-            return default_paged_impl()
-        return self.serve.paged_impl
-
-    def _paged_fns(self):
-        """Jitted paged fns keyed on the resolved impl so a serve-config
-        change after first use is honoured: (scan prefill, chunked
-        prefill, fused decode step).  The scan prefill retraces once per
-        distinct prompt length (that is why it is the legacy path); the
-        chunked prefill traces exactly once -- chunk shape, page-table
-        width and position offsets are all runtime values."""
-        impl = self._paged_impl()
-        if (impl == "paged" and jax.default_backend() == "tpu"
-                and self.serve.page_size % 128):
-            raise ValueError(
-                f"page_size={self.serve.page_size} must be a multiple of "
-                "128 (TPU lane width) for the compiled Pallas paged "
-                "kernel; pick a 128-multiple or paged_impl="
-                "'paged_reference'")
-        if impl not in self._paged_fn_cache:
-            model = self.model
-            engine = self
-
-            def dec(params, tok, pools, table, pos):
-                return model.decode_step_paged(params, tok, pools, table,
-                                               pos, impl=impl)
-
-            def pre_scan(params, prompt, pools, table_row, pos0):
-                # pos0: (1,) int32 runtime offset -- a prefix-cache hit
-                # scans only the uncached prompt tail from matched_len
-                s = prompt.shape[1]
-
-                def step(c, t):
-                    lg, c = model.decode_step_paged(
-                        params, prompt[:, t], c, table_row,
-                        pos0 + t.astype(jnp.int32), impl=impl)
-                    return c, lg
-
-                pools, lgs = jax.lax.scan(step, pools, jnp.arange(s))
-                return pools, lgs[-1]
-
-            def pre_chunk(params, chunk, pools, table_row, pos_start,
-                          n_valid):
-                engine.prefill_trace_count += 1    # host-side, trace-time
-                logits, pools = model.prefill_chunk_paged(
-                    params, chunk, pools, table_row, pos_start, n_valid,
-                    impl=impl)
-                # the chunk's last *valid* row: only meaningful logits --
-                # padding rows attended through the scratch page
-                last = jnp.take_along_axis(
-                    logits, jnp.maximum(n_valid - 1, 0)[:, None, None],
-                    axis=1)[:, 0]
-                return pools, last
-
-            self._paged_fn_cache[impl] = (
-                jax.jit(pre_scan, donate_argnums=(2,)),
-                jax.jit(pre_chunk, donate_argnums=(2,)),
-                jax.jit(dec, donate_argnums=(2,)))
-        return self._paged_fn_cache[impl]
-
     def generate_stream(self, requests: Iterable[Request],
                         key: Optional[jax.Array] = None):
-        """Continuous-batching generation over the paged KV cache.
+        """Continuous-batching generation over the persistent core.
 
-        ``requests``: scheduler.Request objects (any number -- they queue).
-        Yields StreamEvent(request_id, token, index, finished) as tokens
-        are produced.  Each step the scheduler retires finished sequences
-        (reclaiming their pages), admits waiting requests into freed
-        slots, spends up to ``prefill_token_budget`` prompt tokens on
-        chunked prefill of PREFILLING slots, then runs one fused decode
-        step for every RUNNING slot -- decode tokens keep streaming while
-        long prompts prefill.  Idle and mid-prefill slots write to the
-        scratch page and are ignored.
+        Submits ``requests`` (scheduler.Request objects -- any number,
+        they queue) to ``self.core`` and yields
+        StreamEvent(request_id, token, index, finished) as ``step()``
+        produces tokens, until every submitted request finished or
+        aborted.  Abandoning the generator aborts this call's live
+        requests -- their pages are freed, shared prefix pages just drop
+        one reference, and the core keeps serving.
         """
-        serve = self.serve
-        if serve.prefix_cache:
-            # cross-request KV reuse: cache manager, radix index and the
-            # device pools all persist across generate_stream calls
-            if self._shared_state is None:
-                mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
-                                   serve.max_batch, serve.max_pages_per_seq)
-                prefix = RadixPrefixIndex(
-                    mgr, serve.page_size, serve.prefix_cache_pages)
-                self._shared_state = [mgr, prefix, None]
-            mgr, prefix = self._shared_state[0], self._shared_state[1]
-        else:
-            mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
-                               serve.max_batch, serve.max_pages_per_seq)
-            prefix = None
-        sched = ContinuousBatchScheduler(
-            mgr, serve.max_batch, admission=serve.admission,
-            watermark_pages=serve.watermark, prefix_cache=prefix)
-        pressure = PressureManager(self.cfg, serve, mgr, sched,
-                                   prefix_cache=prefix)
-        # observability: benchmarks/tests read peak page usage, retire
-        # counts and preemption stats off the live objects after (or
-        # during) the stream
-        self.last_cache, self.last_scheduler = mgr, sched
-        self.last_pressure, self.last_prefix = pressure, prefix
-        # submit (and validate) eagerly, at the call site: the decode loop
-        # is a generator and would otherwise defer errors to first next()
-        for r in requests:
-            sched.submit(r)
-        return self._stream(mgr, sched, pressure, key)
-
-    def _first_token(self, req, slot, last_logits, next_tok, key):
-        """Sample a freshly-prefilled sequence's first token and flip the
-        request into the decoding state."""
-        req.state = RUNNING
-        tok = int(sample_token(
-            last_logits, key, temperature=self.serve.temperature,
-            top_k=self.serve.top_k)[0])
-        req.generated.append(tok)
-        next_tok[slot] = tok
-        return StreamEvent(req.id, tok, 0, req.done)
-
-    @staticmethod
-    def _apply_cow(mgr: PagedKVCache, pools):
-        """Replay pending copy-on-write page moves on the device pools:
-        the host manager already rewired the page table, the contents
-        must follow before the next launch reads or writes the copy."""
-        if not mgr.cow_pending:
-            return pools
-        pairs, mgr.cow_pending = mgr.cow_pending, []
-        return copy_pages(pools, [s for s, _ in pairs],
-                          [d for _, d in pairs])
-
-    def _grow(self, mgr: PagedKVCache, pressure: PressureManager, pools,
-              slot: int, n: int):
-        """``mgr.append(slot, n)`` with page-pressure relief: on
-        OutOfPages, reclaim prefix-cache leaves or evict the newest-
-        admitted other sequence (swap or recompute) and retry.
-        Terminates because submit-time validation guarantees any single
-        request fits the pool alone.  Returns the (possibly replaced)
-        pools with any copy-on-write page copies applied."""
-        while True:
-            try:
-                mgr.append(slot, n)
-                return self._apply_cow(mgr, pools)
-            except OutOfPages:
-                pressure.relieve(pools, protect=slot)
-
-    @staticmethod
-    def _prefill_groups(jobs, width: int):
-        """Pack this step's prefill jobs into batched launches: first-fit
-        into the earliest group that has room and no job for the same
-        slot yet (a slot's chunk k+1 must launch after its chunk k; the
-        first-fit order preserves that).  Distinct sequences' chunks ride
-        one ``prefill_chunk_paged`` call instead of one launch each."""
-        groups: list = []
-        for job in jobs:
-            slot = job[0]
-            for g in groups:
-                if len(g) < width and all(j[0] != slot for j in g):
-                    g.append(job)
-                    break
-            else:
-                groups.append([job])
-        return groups
-
-    def _resume_decode(self, req, slot, next_tok) -> None:
-        """Flip a resumed sequence whose prefill state is fully restored
-        back into decode: its next input token was already sampled before
-        the preemption, so nothing is emitted here."""
-        req.state = RUNNING
-        next_tok[slot] = req.generated[-1]
-
-    def _stream(self, mgr: PagedKVCache, sched: ContinuousBatchScheduler,
-                pressure: PressureManager, key: Optional[jax.Array]):
-        serve = self.serve
-        ps = mgr.page_size
-        npages = mgr.num_pages
-        prefix = sched.prefix_cache
-        persist = self._shared_state if serve.prefix_cache else None
-        if persist is not None and persist[2] is not None:
-            pools = persist[2]          # cached pages carry live KV
-        else:
-            pools = self.model.init_paged_cache(npages, ps)
-        pre_scan, pre_chunk, decode = self._paged_fns()
-        key = key if key is not None else jax.random.PRNGKey(serve.seed)
-        next_tok = np.zeros((serve.max_batch,), np.int32)
-        chunk = serve.prefill_chunk_tokens
-        budget = serve.prefill_budget_tokens
-
+        core = self.core
+        offset = _seed_offset(key)
+        # submit (and validate) eagerly, at the call site: the drain loop
+        # is a generator and would otherwise defer errors to first next().
+        # On a mid-batch failure, un-queue this call's earlier submissions
+        # -- the core persists, a rejected batch must not leave strays.
+        submitted = []
         try:
-            while sched.has_work:
-                sched.retire()
-                admitted = sched.admit()
-                # RESUMING path: swap-preempted requests re-admitted by the
-                # scheduler get their stashed KV copied back into the pages
-                # admission just materialised (their shared prefix was
-                # re-shared from the index); a sequence that was decoding
-                # when evicted rejoins the decode batch directly (its next
-                # input token was sampled before the preemption).  A stash
-                # whose resume was downgraded to recompute is dropped.
-                for slot, req in admitted:
-                    if pressure.holds(req.id):
-                        if req.resume_kind == "swap":
-                            pools = pressure.restore(pools, slot, req)
-                        else:
-                            pressure.drop(req.id)
-                    if req.state == RUNNING:
-                        next_tok[slot] = req.generated[-1]
-                if not admitted and not sched.running():
-                    if not sched.waiting and not sched.resuming:
-                        break               # everything retired
-                    # submit-time validation guarantees the head of either
-                    # queue fits an empty pool (the watermark is waived when
-                    # no slot is occupied); kept as a cheap tripwire
-                    req = (sched.resuming or sched.waiting)[0]
-                    raise RuntimeError(
-                        f"pool too small for request {req.id}: needs "
-                        f"{-(-req.target_len // ps)} pages, pool has "
-                        f"{npages - 1}")
-                if serve.debug_invariants:
-                    mgr.check_invariants(
-                        extern_refs=prefix.page_refs() if prefix else None)
+            for r in requests:
+                submitted.append(core.submit_request(r, seed_offset=offset))
+        except Exception:
+            for r in submitted:
+                core.abort(r.id)
+            raise
 
-                # ---- prefill phase -------------------------------------------
-                if serve.prefill_mode == "scan":
-                    # legacy: the whole uncached (re)prefill tail at once,
-                    # one token per scan step, retraced per length
-                    # (equivalence oracle); a prefix-cache hit starts the
-                    # scan at matched_len over the shared pages
-                    for slot, req in admitted:
-                        if sched.slots[slot] is not req \
-                                or req.state != PREFILLING:
-                            continue        # preempted again, or swap-resumed
-                        start = req.prefilled
-                        toks = req.prefill_tokens[start:]
-                        pools = self._grow(mgr, pressure, pools, slot,
-                                           len(toks))
-                        pools, last_logits = pre_scan(
-                            self.params, jnp.asarray(toks[None]), pools,
-                            jnp.asarray(mgr.device_row(slot)),
-                            jnp.full((1,), start, jnp.int32))
-                        req.prefilled = start + len(toks)
-                        if req.generated:
-                            self._resume_decode(req, slot, next_tok)
-                        else:
-                            key, sub = jax.random.split(key)
-                            yield self._first_token(req, slot, last_logits,
-                                                    next_tok, sub)
+        buf: deque = deque()
+        sub = ({r.id for r in submitted}, buf)
+        subs = self._stream_subs
+        # register eagerly: interleaved drains on the one shared core may
+        # step out this call's tokens before its generator is first
+        # advanced -- they must land in this buffer, in production order
+        subs.append(sub)
+
+        def dispatch(events):
+            # route every stepped event to its call's buffer; events of
+            # requests no drain owns (direct add_request users) are
+            # recoverable from core.orphan_events
+            for ev in events:
+                for other_ids, other_buf in subs:
+                    if ev.request_id in other_ids:
+                        other_buf.append(ev)
+                        break
                 else:
-                    # chunked: fixed-size chunks through the full forward,
-                    # budgeted per step so decode slots keep producing; jobs
-                    # for distinct sequences batch into one launch, padded to
-                    # the next power-of-two row count (a lone prefilling
-                    # prompt stays a 1-row launch; traces stay bounded by
-                    # log2(max_batch)+1 widths, never by prompt length)
-                    width = serve.max_batch
-                    for group in self._prefill_groups(
-                            sched.prefill_schedule(budget, chunk), width):
-                        live = []
-                        for slot, req, start, n in group:
-                            if sched.slots[slot] is not req \
-                                    or req.state != PREFILLING:
-                                continue    # victim of an earlier _grow
-                            pools = self._grow(mgr, pressure, pools, slot, n)
-                            live.append((slot, req, start, n))
-                        # _grow may have evicted an earlier group member
-                        live = [(s, r, st, n) for s, r, st, n in live
-                                if sched.slots[s] is r]
-                        if not live:
-                            continue
-                        bw = 1
-                        while bw < len(live):
-                            bw *= 2
-                        bw = min(bw, width)
-                        buf = np.zeros((bw, chunk), np.int32)
-                        table = np.full((bw, mgr.max_pages_per_seq),
-                                        mgr.SCRATCH, np.int32)
-                        pos0 = np.zeros((bw,), np.int32)
-                        nval = np.zeros((bw,), np.int32)
-                        for i, (slot, req, start, n) in enumerate(live):
-                            buf[i, :n] = req.prefill_tokens[start:start + n]
-                            table[i] = mgr.table[slot]
-                            pos0[i] = start
-                            nval[i] = n
-                        self.prefill_launches += 1
-                        pools, last_logits = pre_chunk(
-                            self.params, jnp.asarray(buf), pools,
-                            jnp.asarray(table), jnp.asarray(pos0),
-                            jnp.asarray(nval))
-                        for i, (slot, req, start, n) in enumerate(live):
-                            req.prefilled = start + n
-                            if not req.prefill_done:
-                                continue
-                            if req.generated:   # recompute-resume finished
-                                self._resume_decode(req, slot, next_tok)
-                            else:
-                                key, sub = jax.random.split(key)
-                                yield self._first_token(
-                                    req, slot, last_logits[i:i + 1],
-                                    next_tok, sub)
+                    core.orphan_events.append(ev)
 
-                # ---- decode phase --------------------------------------------
-                cand = [(s, r) for s, r in sched.decoding() if not r.done]
-                # materialise the page (maybe a fresh one) every running
-                # sequence's next token will be written to -- evicting other
-                # sequences under pressure -- THEN snapshot the table for the
-                # device step.
-                for slot, req in cand:
-                    if sched.slots[slot] is not req:
-                        continue            # evicted by an earlier _grow
-                    pools = self._grow(mgr, pressure, pools, slot, 1)
-                running = [(s, r) for s, r in cand if sched.slots[s] is r]
-                if serve.debug_invariants:
-                    mgr.check_invariants(
-                        extern_refs=prefix.page_refs() if prefix else None)
-                if not running:
-                    continue
-                pos_np = np.zeros((serve.max_batch,), np.int32)
-                for slot, _ in running:
-                    pos_np[slot] = mgr.seq_len(slot) - 1
-                table = mgr.device_table()
-                for slot, _ in sched.prefilling():
-                    # mid-prefill slots sit out the decode step: scratch-page
-                    # table row + pos 0, like idle slots (their real pages
-                    # must not see the decode step's writes)
-                    table[slot, :] = mgr.SCRATCH
-                logits, pools = decode(
-                    self.params, jnp.asarray(next_tok), pools,
-                    jnp.asarray(table), jnp.asarray(pos_np))
-                key, sub = jax.random.split(key)
-                toks = np.asarray(sample_token(
-                    logits, sub, temperature=serve.temperature,
-                    top_k=serve.top_k))
-                for slot, req in running:
-                    tok = int(toks[slot])
-                    req.generated.append(tok)
-                    next_tok[slot] = tok
-                    yield StreamEvent(req.id, tok, len(req.generated) - 1,
-                                      req.done)
-        finally:
-            # A stream can end early: the caller abandons the generator
-            # (GeneratorExit) or an error escapes.  With persistent
-            # prefix-cache state the shared manager/pools outlive this
-            # call, so reconcile: this stream's live slots are freed
-            # (their requests are lost with the call, shared pages just
-            # drop one reference), un-replayed COW debts die with them,
-            # and the persisted pools reference is refreshed -- `pools`
-            # is always the latest post-launch (undonated) object.
-            if persist is not None:
-                mgr.cow_pending.clear()
-                for slot in range(sched.max_slots):
-                    if sched.slots[slot] is not None \
-                            and mgr.is_active(slot):
-                        mgr.free(slot)
-                        sched.slots[slot] = None
-                persist[2] = pools
+        cleaned = False
+
+        def cleanup():
+            nonlocal cleaned
+            if cleaned:
+                return
+            cleaned = True
+            subs.remove(sub)
+            for r in submitted:
+                if r.state not in (FINISHED, ABORTED):
+                    core.abort(r.id)
+
+        def drain():
+            try:
+                while True:
+                    while buf:          # may refill while we yield
+                        yield buf.popleft()
+                    if all(r.state in (FINISHED, ABORTED)
+                           for r in submitted):
+                        break
+                    dispatch(core.step())
+                while buf:
+                    yield buf.popleft()
+            finally:
+                cleanup()
+
+        return _StreamDrain(drain(), cleanup)
 
     def throughput_tokens_per_s(self, batch: int, prompt_len: int,
                                 n_new: int = 8) -> float:

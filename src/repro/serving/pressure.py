@@ -177,7 +177,8 @@ class PressureManager:
         self.prefix_cache = prefix_cache    # RadixPrefixIndex or None
         self.stats = {"preemptions": 0, "swaps": 0, "recomputes": 0,
                       "swap_bytes_out": 0, "swap_bytes_in": 0,
-                      "cache_evictions": 0, "swap_drops": 0}
+                      "cache_evictions": 0, "swap_drops": 0,
+                      "abort_drops": 0}
 
     # -- policy ----------------------------------------------------------
     def choose_policy(self, n_pages: int, n_tokens: int) -> str:
@@ -275,9 +276,11 @@ class PressureManager:
         req.resume_shared_len = 0
         return scatter_pages(pools, pages, host_data)
 
-    def drop(self, request_id: int) -> None:
-        """Discard a stash whose owner was downgraded to recompute while
+    def drop(self, request_id: int, *, reason: str = "downgrade") -> None:
+        """Discard a stash: its owner was downgraded to recompute while
         waiting (its shared prefix got evicted, so the exclusive-suffix
-        stash alone no longer reconstructs the sequence)."""
+        stash alone no longer reconstructs the sequence), or it was
+        aborted while swap-preempted (``reason="abort"``)."""
         self.host_pool.pop(request_id)
-        self.stats["swap_drops"] += 1
+        self.stats["abort_drops" if reason == "abort"
+                   else "swap_drops"] += 1

@@ -43,6 +43,7 @@ them under pool pressure.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
@@ -51,17 +52,73 @@ import numpy as np
 
 from repro.serving.paged_cache import PagedKVCache, pages_needed
 
-WAITING, PREFILLING, RUNNING, PREEMPTED, FINISHED = (
-    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED")
+WAITING, PREFILLING, RUNNING, PREEMPTED, FINISHED, ABORTED = (
+    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED", "ABORTED")
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls, carried on the ``Request``.
+
+    Frozen/hashable so a request's sampling behaviour is fixed at submit
+    time.  ``seed`` feeds a counter-based RNG stream: the key for the
+    request's n-th sampled token is ``fold_in(PRNGKey(seed), n)``, so
+    sampled tokens are invariant to batch composition, co-tenants,
+    preemption and admission order.  The default is greedy
+    (``temperature == 0``) -- the sane serving default; pass a positive
+    temperature (and usually a distinct seed) to sample.
+    """
+    temperature: float = 0.0
+    top_k: int = 0                     # 0 = no truncation
+    seed: int = 0
+    max_new_tokens: int = 16
+    # generation stops the step after any of these token ids is emitted
+    # (the stop token itself is the request's last token, like eos was)
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens} "
+                "(prefill always emits one token)")
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        # normalise any iterable (set, list, ndarray) to a sorted tuple
+        # so params stay hashable and comparisons are order-independent
+        object.__setattr__(
+            self, "stop_token_ids",
+            tuple(sorted({int(t) for t in self.stop_token_ids})))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0 or self.top_k == 1
+
+    def with_stop(self, eos_id: int) -> "SamplingParams":
+        if eos_id in self.stop_token_ids:
+            return self
+        return dataclasses.replace(
+            self, stop_token_ids=self.stop_token_ids + (int(eos_id),))
 
 
 @dataclass
 class Request:
-    """One generation request flowing through the engine."""
+    """One generation request flowing through the engine.
+
+    ``sampling`` is the authority for generation length, stop tokens and
+    the sampling distribution.  ``max_new_tokens=`` / ``eos_id=`` remain
+    as constructor aliases: without an explicit ``SamplingParams`` they
+    build one at resolve time (the engine core fills temperature/top_k
+    from the deprecated engine-global ``ServeConfig`` knobs); alongside
+    one they override/extend it.
+    """
     id: int
     prompt: np.ndarray                 # (S,) int32 token ids
-    max_new_tokens: int
+    max_new_tokens: Optional[int] = None
     eos_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
     state: str = WAITING
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
@@ -79,10 +136,33 @@ class Request:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if len(self.prompt) == 0:
             raise ValueError("empty prompt")
+        if self.sampling is not None:
+            # fold the constructor aliases into the params: an explicit
+            # max_new_tokens= wins, an eos_id= joins the stop set
+            sp = self.sampling
+            if self.max_new_tokens is not None \
+                    and self.max_new_tokens != sp.max_new_tokens:
+                sp = dataclasses.replace(
+                    sp, max_new_tokens=self.max_new_tokens)
+            if self.eos_id is not None:
+                sp = sp.with_stop(self.eos_id)
+            self.sampling = sp
+            self.max_new_tokens = sp.max_new_tokens
+        elif self.max_new_tokens is None:
+            raise ValueError(
+                f"request {self.id}: pass max_new_tokens= or sampling=")
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {self.max_new_tokens} "
                 "(prefill always emits one token)")
+
+    @property
+    def stop_token_ids(self) -> Tuple[int, ...]:
+        """Stop set: the sampling params' when resolved, else the legacy
+        eos alias (a pre-resolution ``done`` check still honours it)."""
+        if self.sampling is not None:
+            return self.sampling.stop_token_ids
+        return (self.eos_id,) if self.eos_id is not None else ()
 
     @property
     def target_len(self) -> int:
@@ -112,9 +192,11 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return (len(self.generated) >= self.max_new_tokens
-                or (self.eos_id is not None and len(self.generated) > 0
-                    and self.generated[-1] == self.eos_id))
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        stop = self.stop_token_ids
+        return bool(stop and self.generated
+                    and self.generated[-1] in stop)
 
 
 class ContinuousBatchScheduler:
@@ -136,7 +218,12 @@ class ContinuousBatchScheduler:
         self.waiting: deque = deque()
         self.resuming: deque = deque()      # preempted, FIFO by arrival
         self.slots: List[Optional[Request]] = [None] * self.max_slots
-        self.finished: List[Request] = []
+        # recently retired requests, for introspection.  Bounded: the
+        # scheduler now lives on a persistent core, so an unbounded list
+        # would grow with every request ever served; ``finished_count``
+        # is the monotonic total.
+        self.finished: deque = deque(maxlen=4096)
+        self.finished_count = 0
         self.preempt_count = 0
         self._admit_seq = 0
         self._admitted_at: dict = {}        # id -> admission sequence no.
@@ -197,6 +284,7 @@ class ContinuousBatchScheduler:
                 self.slots[slot] = None
                 self._admitted_at.pop(req.id, None)
                 self.finished.append(req)
+                self.finished_count += 1
                 retired.append(req)
         return retired
 
@@ -367,6 +455,40 @@ class ContinuousBatchScheduler:
         self.resuming.insert(idx, req)
         self.preempt_count += 1
         return req
+
+    # -- abort ------------------------------------------------------------
+    def abort(self, request_id: int) -> Optional[Request]:
+        """Cancel a request wherever it currently lives.  Queued requests
+        are simply removed; an occupied slot is freed -- shared pages
+        drop one reference (never freed from under a sharer or the
+        prefix index), exclusive pages return to the free list, and any
+        pending copy-on-write debt whose destination page just became
+        free is cancelled (the copy target may be reallocated to another
+        sequence at any moment).  Returns the request, or None when the
+        id is unknown/already finished.  A host-side swap stash is the
+        PressureManager's to drop -- the engine core handles that."""
+        for q in (self.waiting, self.resuming):
+            for req in q:
+                if req.id == request_id:
+                    q.remove(req)
+                    req.state = ABORTED
+                    return req
+        for slot, req in enumerate(self.slots):
+            if req is None or req.id != request_id:
+                continue
+            pages = self.cache.owned_pages(slot)
+            self.cache.free(slot)
+            freed = {p for p in pages if self.cache.refcount(p) == 0}
+            if freed and self.cache.cow_pending:
+                self.cache.cow_pending = [
+                    (s, d) for s, d in self.cache.cow_pending
+                    if d not in freed]
+            req.state = ABORTED
+            req.slot = None
+            self.slots[slot] = None
+            self._admitted_at.pop(req.id, None)
+            return req
+        return None
 
     def prefill_schedule(self, budget: int,
                          chunk: int) -> List[Tuple[int, Request, int, int]]:
