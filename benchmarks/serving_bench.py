@@ -35,6 +35,14 @@ regress against):
   arrive *while* the engine runs, instead of all up front.  Reports
   TTFT and TPOT (time per output token) p50/p99 -- the latency numbers
   an iteration-level engine exists for.
+* **distributed** -- tensor-parallel serving on a forced multi-device
+  CPU mesh (a child process under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``): the paged
+  engine sharded 2- and 4-way (kv-head groups x page-row sub-shards,
+  partial attention merged via the LSE combination) must emit greedy
+  tokens bit-identical to the single-device engine, and the section
+  times the tp=4 engine under the paper's tiling-AllReduce (§4.2 T3)
+  against the monolithic single-AllReduce baseline.
 
     PYTHONPATH=src python -m benchmarks.serving_bench \
         [--arch gemma2-2b] [--requests 12] [--prefill-len 512]
@@ -45,6 +53,8 @@ import argparse
 import dataclasses
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -481,6 +491,95 @@ def open_loop(arch: str = "gemma2-2b", n_requests: int = 10,
     }
 
 
+def _distributed_child(arch: str, n_requests: int, seed: int,
+                       smoke: bool = True) -> None:
+    """Runs INSIDE the forced-multi-device child process: tp=1 oracle,
+    tp=2 / tp=4 tiled and tp=4 single-AllReduce runs of one workload;
+    prints the section JSON on the last stdout line."""
+    cfg, model, params = _build(arch, smoke)
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for i in range(n_requests):
+        s = int(rng.integers(4, 40))
+        prompts.append(rng.integers(0, cfg.vocab_size, size=s))
+    max_new = 16
+
+    def run_tp(tp, collectives="tiled"):
+        serve = ServeConfig(max_batch=4, max_seq_len=96, page_size=16,
+                            prefill_chunk=16, tp=tp,
+                            tp_collectives=collectives)
+        core = EngineCore(model=model, params=params, cfg=cfg, serve=serve)
+
+        def drain(offset):
+            toks = {}
+            while core.has_work:
+                for ev in core.step():
+                    toks.setdefault(ev.request_id - offset,
+                                    []).append(ev.token)
+            return toks
+
+        # pass 0 compiles (prefill widths + fused decode); pass 1 is the
+        # timed, steady-state measurement on the same jit caches
+        for i, p in enumerate(prompts):
+            core.add_request(p, SamplingParams(max_new_tokens=max_new),
+                             request_id=i)
+        toks = drain(0)
+        for i, p in enumerate(prompts):
+            core.add_request(p, SamplingParams(max_new_tokens=max_new),
+                             request_id=1000 + i)
+        steps0 = core.stats()["steps"]
+        t0 = time.perf_counter()
+        timed = drain(1000)
+        dt = time.perf_counter() - t0
+        steps = core.stats()["steps"] - steps0
+        assert timed == toks, "engine output changed between passes"
+        total = sum(len(v) for v in timed.values())
+        return toks, {
+            "wall_s": round(dt, 3),
+            "engine_steps": steps,
+            "ms_per_step": round(1e3 * dt / steps, 2),
+            "tokens_per_s": round(total / dt, 1),
+        }
+
+    base, t1 = run_tp(1)
+    report = {
+        "devices": jax.device_count(),
+        "requests": n_requests,
+        "generated_tokens": n_requests * max_new,
+        "tokens_match": {},
+        "tp1": t1,
+    }
+    for tp, coll in ((2, "tiled"), (4, "tiled"), (4, "single")):
+        toks, timing = run_tp(tp, coll)
+        report["tokens_match"][f"tp{tp}-{coll}"] = bool(toks == base)
+        report[f"tp{tp}-{coll}"] = timing
+    report["tp4_tiled_vs_single_step_speedup"] = round(
+        report["tp4-single"]["ms_per_step"]
+        / report["tp4-tiled"]["ms_per_step"], 3)
+    print(json.dumps(report))
+
+
+def distributed(arch: str = "gemma2-2b", n_requests: int = 6,
+                devices: int = 4, seed: int = 0,
+                smoke: bool = True) -> dict:
+    """Tensor-parallel serving section: spawns a child process with
+    ``devices`` forced fake CPU devices (the main process keeps its
+    single-device view) and collects its report."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(REPO_ROOT, "src"), REPO_ROOT]))
+    code = (f"from benchmarks.serving_bench import _distributed_child; "
+            f"_distributed_child({arch!r}, {n_requests}, {seed}, {smoke})")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         cwd=REPO_ROOT, capture_output=True, text=True,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"distributed bench child failed:\n{out.stderr[-3000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="gemma2-2b")
@@ -509,6 +608,11 @@ def main():
     ap.add_argument("--skip-open-loop", action="store_true",
                     help="skip the open-loop EngineCore section")
     ap.add_argument("--open-loop-requests", type=int, default=10)
+    ap.add_argument("--skip-distributed", action="store_true",
+                    help="skip the tensor-parallel serving section")
+    ap.add_argument("--distributed-requests", type=int, default=6)
+    ap.add_argument("--tp-devices", type=int, default=4,
+                    help="forced fake CPU devices for the TP child")
     ap.add_argument("--mean-gap-steps", type=float, default=2.0,
                     help="mean Poisson inter-arrival gap (engine steps)")
     ap.add_argument("--system-len", type=int, default=96,
@@ -563,6 +667,12 @@ def main():
             page_size=args.page_size,
             mean_gap_steps=args.mean_gap_steps, seed=args.seed,
             smoke=not args.full)
+    if not args.skip_distributed:
+        # tensor-parallel engine on a forced multi-device CPU mesh:
+        # bit-identity vs tp=1 and tiled- vs single-AllReduce step time
+        report["distributed"] = distributed(
+            arch=args.arch, n_requests=args.distributed_requests,
+            devices=args.tp_devices, seed=args.seed, smoke=not args.full)
 
     def flat(prefix, d):
         for k, v in d.items():

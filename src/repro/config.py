@@ -304,6 +304,19 @@ class ServeConfig:
     # reclaimed whenever the free list runs low.
     prefix_cache_pages: int = 0
 
+    # --- tensor parallelism (sharding/tp.py) ----------------------------
+    # Device count to shard attention + KV page pools over.  Factored as
+    # gcd(tp, num_kv_heads) kv-head groups x within-page row sub-shards
+    # (partial attention outputs merge exactly via the LSE combination),
+    # so tp may exceed the KV head count.  1 = single-device engine.
+    tp: int = 1
+    # O-proj / down-proj partial-sum collectives: "tiled" overlaps the
+    # AllReduce with per-chunk matmuls (paper §4.2 T3); "single" is the
+    # monolithic baseline the serving benchmark compares against.
+    tp_collectives: str = "tiled"
+    tp_ar_chunks: int = 4
+    tp_first_chunk_frac: float = 0.5
+
     @property
     def sampling_overridden(self) -> bool:
         """True when the deprecated engine-global sampling knobs were

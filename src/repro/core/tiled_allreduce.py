@@ -38,20 +38,43 @@ from repro.core.compat import shard_map as _shard_map
 def chunk_sizes(total: int, n_chunks: int, first_frac: float = 0.5,
                 align: int = 1) -> Sequence[int]:
     """Split ``total`` into ``n_chunks`` pieces, the first scaled by
-    ``first_frac`` (paper: smaller head block), all aligned to ``align``."""
-    n_chunks = max(1, min(n_chunks, total // max(align, 1) or 1))
+    ``first_frac`` (paper: smaller head block), EVERY piece a multiple of
+    ``align``.
+
+    The split is computed in units of ``align`` so the trailing chunk is
+    aligned too -- the old code appended a raw remainder, handing
+    ``ring_matmul_allreduce`` (``piece = s // n``) and
+    ``tiled_matmul_reducescatter`` (``psum_scatter`` needs axis-divisible
+    chunks) a chunk they silently mis-split.  ``total`` itself must be a
+    multiple of ``align``; callers with ragged totals pad first and slice
+    the result (see ``ring_matmul_allreduce``).
+    """
+    align = max(align, 1)
+    if total <= 0:
+        raise ValueError(f"total must be positive, got {total}")
+    if total % align:
+        raise ValueError(
+            f"total={total} is not a multiple of align={align}; pad the "
+            f"leading dim to a multiple first and slice the result")
+    units = total // align
+    n_chunks = max(1, min(n_chunks, units))
     if n_chunks == 1:
-        return [total]
-    base = total / (n_chunks - 1 + first_frac)
-    sizes = [max(align, int(base * first_frac) // align * align)]
-    remaining = total - sizes[0]
-    for i in range(n_chunks - 2):
-        s = max(align, int(base) // align * align)
-        s = min(s, remaining - align * (n_chunks - 2 - i))
-        sizes.append(s)
-        remaining -= s
-    sizes.append(remaining)
-    assert sum(sizes) == total and all(s > 0 for s in sizes), sizes
+        sizes = [total]
+    else:
+        base = units / (n_chunks - 1 + first_frac)
+        first = min(max(1, int(base * first_frac)),
+                    units - (n_chunks - 1))
+        sizes = [first * align]
+        remaining = units - first
+        for i in range(n_chunks - 2):
+            su = max(1, int(base))
+            su = min(su, remaining - (n_chunks - 2 - i))
+            sizes.append(su * align)
+            remaining -= su
+        sizes.append(remaining * align)
+    assert sum(sizes) == total, sizes
+    assert all(s > 0 for s in sizes), sizes
+    assert all(s % align == 0 for s in sizes), sizes
     return sizes
 
 
@@ -81,6 +104,27 @@ def single_matmul_allreduce(x: jax.Array, w: jax.Array,
     return jax.lax.psum(x @ w, axis_name)
 
 
+def matmul_allreduce(x: jax.Array, w: jax.Array, axis_name, *,
+                     mode: str = "tiled", n_chunks: int = 4,
+                     first_chunk_frac: float = 0.5) -> jax.Array:
+    """Row-parallel matmul + AllReduce, dispatching on ``mode``.
+
+    The shard_map-body entry point the tensor-parallel serving path uses
+    for O-proj / down-proj partial sums.  ``axis_name`` may be a tuple of
+    mesh axes (the paged TP mesh reduces over both its kv-head-group and
+    page-row axes at once).  ``mode="tiled"`` emits one psum per chunk of
+    the token dim (paper T3, overlappable); ``"single"`` is the
+    monolithic baseline the benchmark compares against.
+    """
+    if mode == "single":
+        return single_matmul_allreduce(x, w, axis_name)
+    if mode != "tiled":
+        raise ValueError(f"unknown allreduce mode {mode!r} "
+                        "(expected 'tiled' or 'single')")
+    return tiled_matmul_allreduce(x, w, axis_name, n_chunks=n_chunks,
+                                  first_chunk_frac=first_chunk_frac)
+
+
 def tiled_matmul_reducescatter(x: jax.Array, w: jax.Array, axis_name: str, *,
                                n_chunks: int = 4,
                                first_chunk_frac: float = 0.5) -> jax.Array:
@@ -90,6 +134,11 @@ def tiled_matmul_reducescatter(x: jax.Array, w: jax.Array, axis_name: str, *,
     """
     t = x.shape[0]
     axis_size = _axis_size(axis_name)
+    if t % axis_size:
+        raise ValueError(
+            f"tiled_matmul_reducescatter: leading dim {t} must divide the "
+            f"axis size {axis_size} -- psum_scatter splits every chunk "
+            f"evenly over the axis; pad the rows first")
     sizes = chunk_sizes(t, n_chunks, first_chunk_frac, align=axis_size)
     outs = []
     off = 0
@@ -105,12 +154,20 @@ def ring_matmul_allreduce(x: jax.Array, w: jax.Array, axis_name: str, *,
                           n_chunks: int = 4) -> jax.Array:
     """Explicit overlap variant: reduce-scatter ring interleaved with the
     per-chunk matmuls, then all-gather.  The ppermute of chunk i runs while
-    chunk i+1's matmul executes -- scheduler-independent overlap."""
+    chunk i+1's matmul executes -- scheduler-independent overlap.
+
+    Rows are padded to a multiple of the axis size (each chunk ring-
+    scatters into ``s // n`` pieces) and the pad sliced off the result,
+    so ragged token counts stay exact.
+    """
     t = x.shape[0]
     n = _axis_size(axis_name)
+    pad = (-t) % n
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
-    sizes = chunk_sizes(t, n_chunks, 1.0, align=n)
+    sizes = chunk_sizes(t + pad, n_chunks, 1.0, align=n)
     outs = []
     off = 0
     for s in sizes:
@@ -128,7 +185,8 @@ def ring_matmul_allreduce(x: jax.Array, w: jax.Array, axis_name: str, *,
             acc = acc + src
         outs.append(jax.lax.all_gather(acc, axis_name, axis=0, tiled=True))
         off += s
-    return jnp.concatenate(outs, axis=0)
+    out = jnp.concatenate(outs, axis=0)
+    return out[:t] if pad else out
 
 
 def fused_attention_linear(q, k, v, w_o, axis_name: str, *,

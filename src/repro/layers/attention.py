@@ -15,13 +15,21 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.core.compat import shard_map as _shard_map
+from repro.core.distributed_decode import (attend_with_positions,
+                                           merge_partial_attention,
+                                           paged_local_view,
+                                           paged_shard_kv_positions)
 from repro.core.fastattention import (default_paged_impl, fast_attention,
                                       fast_attention_decode,
                                       fast_attention_prefill_paged)
+from repro.core.tiled_allreduce import matmul_allreduce
 from repro.layers import common, rotary
 from repro.sharding.rules import constrain
+from repro.sharding.tp import current_tp
 
 # Decode KV-cache layout: "bshd" (token-major, default) or "bhsd"
 # (head-major: the QK/PV contractions need no transposed copy of the
@@ -66,13 +74,16 @@ def attention_logical(cfg: ModelConfig):
 
 
 def _project_qkv(params, x, cfg: ModelConfig, positions):
+    # head counts come from the weight shapes (-1), not the config: a
+    # tensor-parallel shard passes its column-sliced projections through
+    # the same code path (rope is per-head, independent of the count)
     b, s, _ = x.shape
     q = common.dense(x, params["wq"], params.get("bq"))
     k = common.dense(x, params["wk"], params.get("bk"))
     v = common.dense(x, params["wv"], params.get("bv"))
-    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
-    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
-    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    q = q.reshape(b, s, -1, cfg.head_dim)
+    k = k.reshape(b, s, -1, cfg.head_dim)
+    v = v.reshape(b, s, -1, cfg.head_dim)
     if cfg.rope_type == "rope":
         q = rotary.apply_rope(q, positions, theta=cfg.rope_theta)
         k = rotary.apply_rope(k, positions, theta=cfg.rope_theta)
@@ -228,7 +239,16 @@ def apply_attention_prefill_paged(params, x, cfg: ModelConfig,
     table.  All offsets are runtime values: one jit trace serves every
     chunk of every prompt.  Returns (out (B, S_chunk, D), new pools);
     output rows past ``n_valid`` are garbage and must be ignored.
+
+    Under an active tensor-parallel context (sharding/tp.py) the pools
+    are device-sharded and the whole layer runs as a shard_map body with
+    an LSE merge -- see ``_tp_attention_prefill_paged``.
     """
+    tpc = current_tp()
+    if tpc is not None:
+        return _tp_attention_prefill_paged(
+            params, x, cfg, cache, page_table=page_table,
+            pos_start=pos_start, n_valid=n_valid, window=window, tpc=tpc)
     impl = impl or default_paged_impl()
     b, s, _ = x.shape
     positions = pos_start.astype(jnp.int32)[:, None] + \
@@ -259,7 +279,16 @@ def apply_attention_decode_paged(params, x, cfg: ModelConfig,
     ``page_table[b, pos // page_size]`` at offset ``pos % page_size``;
     attention then reads kv_len = pos + 1 tokens through the table.
     Returns (out (B, 1, D), new KVCache of pools).
+
+    Under an active tensor-parallel context (sharding/tp.py) the pools
+    are device-sharded and the whole layer runs as a shard_map body with
+    an LSE merge -- see ``_tp_attention_decode_paged``.
     """
+    tpc = current_tp()
+    if tpc is not None:
+        return _tp_attention_decode_paged(
+            params, x, cfg, cache, page_table=page_table, pos=pos,
+            window=window, tpc=tpc)
     impl = impl or default_paged_impl()
     b = x.shape[0]
     positions = pos.astype(jnp.int32)[:, None]
@@ -280,3 +309,172 @@ def apply_attention_decode_paged(params, x, cfg: ModelConfig,
         impl=impl, page_table=page_table)
     out = out.reshape(b, 1, cfg.q_dim)
     return common.dense(out, params["wo"]), KVCache(k, v)
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel paged attention (shard_map bodies over the TP mesh)
+# ---------------------------------------------------------------------------
+#
+# The pools are sharded (kv_heads -> head-group axis, within-page rows ->
+# page-row axis); weights and activations enter replicated and each shard
+# slices its own projection columns by axis index.  Every shard attends
+# over its local KV rows only; the page-row sub-shards of a kv-head group
+# merge their partial outputs exactly via the log-sum-exp combination
+# (core/distributed_decode.merge_partial_attention), then the O-proj runs
+# row-parallel over per-shard query-head slices with a tiling-AllReduce
+# (core/tiled_allreduce.matmul_allreduce) over the whole mesh.
+
+def _tp_pool_spec(plan) -> P:
+    """(Hkv, P, ps, D) pools: kv heads over the head-group axis,
+    within-page rows over the page-row axis.  The page axis stays third
+    from the end (serving/pressure.py PAGE_AXIS_FROM_END)."""
+    heads_ax, seq_ax = plan.axes
+    return P(heads_ax, None, seq_ax, None)
+
+
+def _tp_slice_attn_params(params, cfg: ModelConfig, gi, si, plan):
+    """This shard's projection slices.  QKV are column-parallel over the
+    kv-head group (all ``s`` page-row sub-shards of a group compute the
+    group's full Q -- they need every query head for the LSE merge);
+    the O-proj is row-parallel over the shard's 1/s query-head slice.
+    Head blocks are contiguous column/row runs, so slices are dynamic
+    (``gi``/``si`` are traced axis indices)."""
+    dh = cfg.head_dim
+    kvl = cfg.num_kv_heads // plan.g       # kv heads per group
+    hq_g = cfg.num_heads // plan.g         # q heads per group
+    hq_s = hq_g // plan.s                  # q heads per O-proj row slice
+    q0, k0 = gi * hq_g * dh, gi * kvl * dh
+
+    def cols(w, off, n):
+        return jax.lax.dynamic_slice_in_dim(w, off, n, axis=1)
+
+    p = {"wq": cols(params["wq"], q0, hq_g * dh),
+         "wk": cols(params["wk"], k0, kvl * dh),
+         "wv": cols(params["wv"], k0, kvl * dh)}
+    if "bq" in params:
+        p["bq"] = jax.lax.dynamic_slice_in_dim(params["bq"], q0,
+                                               hq_g * dh, 0)
+        p["bk"] = jax.lax.dynamic_slice_in_dim(params["bk"], k0,
+                                               kvl * dh, 0)
+        p["bv"] = jax.lax.dynamic_slice_in_dim(params["bv"], k0,
+                                               kvl * dh, 0)
+    o0 = (gi * hq_g + si * hq_s) * dh      # global first row of the slice
+    wo = jax.lax.dynamic_slice_in_dim(params["wo"], o0, hq_s * dh, axis=0)
+    return p, wo, hq_s
+
+
+def _tp_o_proj(merged, wo_loc, si, hq_s, dtype, plan):
+    """Row-parallel O-proj of the merged attention output.
+
+    merged: (B, Hq_group, Sq, D) f32, identical on every page-row
+    sub-shard of the group after the LSE merge; each shard contributes
+    its 1/s query-head slice against its wo row block, summed over the
+    WHOLE mesh (g*s disjoint row blocks) by the tiling-AllReduce."""
+    b, _, sq, d = merged.shape
+    sl = jax.lax.dynamic_slice_in_dim(merged, si * hq_s, hq_s, axis=1)
+    o = sl.astype(dtype).transpose(0, 2, 1, 3).reshape(b * sq, hq_s * d)
+    y = matmul_allreduce(o, wo_loc, plan.axes, mode=plan.collectives,
+                         n_chunks=plan.ar_chunks,
+                         first_chunk_frac=plan.first_chunk_frac)
+    return y.reshape(b, sq, -1)
+
+
+def _tp_attention_decode_paged(params, x, cfg: ModelConfig,
+                               cache: KVCache, *, page_table, pos,
+                               window: Optional[int], tpc):
+    plan, mesh = tpc.plan, tpc.mesh
+    heads_ax, seq_ax = plan.axes
+    pool_spec = _tp_pool_spec(plan)
+
+    def body(prm, xb, kp, vp, table, posb):
+        gi = jax.lax.axis_index(heads_ax)
+        si = jax.lax.axis_index(seq_ax)
+        b = xb.shape[0]
+        sp, wo_loc, hq_s = _tp_slice_attn_params(prm, cfg, gi, si, plan)
+        positions = posb.astype(jnp.int32)[:, None]
+        if cfg.rope_type == "mrope":   # text continuation: t=h=w=pos
+            positions = jnp.broadcast_to(positions, (3, b, 1))
+        q, k_new, v_new = _project_qkv(sp, xb, cfg, positions)
+        # masked single-row write: only the sub-shard owning the row's
+        # within-page offset writes it; everyone else redirects into its
+        # local slice of the scratch page
+        psl = kp.shape[2]
+        ps = psl * plan.s
+        page = table[jnp.arange(b), posb // ps]
+        off = posb % ps
+        own = (off // psl) == si
+        page_t = jnp.where(own, page, 0)
+        off_t = jnp.where(own, off % psl, 0)
+        kp = kp.at[:, page_t, off_t].set(
+            k_new[:, 0].astype(kp.dtype).transpose(1, 0, 2))
+        vp = vp.at[:, page_t, off_t].set(
+            v_new[:, 0].astype(vp.dtype).transpose(1, 0, 2))
+        kv_len = posb.astype(jnp.int32) + 1
+        kv_pos = paged_shard_kv_positions(table.shape[1], ps, psl, si)
+        out, lse = attend_with_positions(
+            q.transpose(0, 2, 1, 3), paged_local_view(kp, table),
+            paged_local_view(vp, table),
+            q_positions=(kv_len - 1)[:, None], kv_positions=kv_pos,
+            kv_len=kv_len, causal=True, window=window,
+            softcap=cfg.attn_logit_softcap)
+        merged = merge_partial_attention(out, lse, seq_ax)
+        return _tp_o_proj(merged, wo_loc, si, hq_s, xb.dtype, plan), kp, vp
+
+    out, k, v = _shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), pool_spec, pool_spec, P(), P()),
+        out_specs=(P(), pool_spec, pool_spec),
+        check_vma=False)(params, x, cache.k, cache.v, page_table, pos)
+    return out, KVCache(k, v)
+
+
+def _tp_attention_prefill_paged(params, x, cfg: ModelConfig,
+                                cache: KVCache, *, page_table, pos_start,
+                                n_valid, window: Optional[int], tpc):
+    plan, mesh = tpc.plan, tpc.mesh
+    heads_ax, seq_ax = plan.axes
+    pool_spec = _tp_pool_spec(plan)
+
+    def body(prm, xb, kp, vp, table, p0, nv):
+        gi = jax.lax.axis_index(heads_ax)
+        si = jax.lax.axis_index(seq_ax)
+        b, s, _ = xb.shape
+        sp, wo_loc, hq_s = _tp_slice_attn_params(prm, cfg, gi, si, plan)
+        positions = p0.astype(jnp.int32)[:, None] + \
+            jnp.arange(s, dtype=jnp.int32)[None]
+        rope_pos = positions
+        if cfg.rope_type == "mrope":   # text continuation: t=h=w=pos
+            rope_pos = jnp.broadcast_to(positions, (3, b, s))
+        q, k_new, v_new = _project_qkv(sp, xb, cfg, rope_pos)
+        # chunk scatter, owner rows only: padding rows and rows owned by
+        # other page-row sub-shards land in the local scratch slice
+        kvl, npages, psl, d = kp.shape
+        ps = psl * plan.s
+        page = table[jnp.arange(b)[:, None], positions // ps]
+        off = positions % ps
+        valid = jnp.arange(s, dtype=jnp.int32)[None] < nv[:, None]
+        own = (off // psl) == si
+        flat = jnp.where(valid & own, page * psl + off % psl, 0)
+        kp = kp.reshape(kvl, npages * psl, d).at[:, flat].set(
+            k_new.astype(kp.dtype).transpose(2, 0, 1, 3)
+        ).reshape(kvl, npages, psl, d)
+        vp = vp.reshape(kvl, npages * psl, d).at[:, flat].set(
+            v_new.astype(vp.dtype).transpose(2, 0, 1, 3)
+        ).reshape(kvl, npages, psl, d)
+        kv_len = p0.astype(jnp.int32) + nv.astype(jnp.int32)
+        kv_pos = paged_shard_kv_positions(table.shape[1], ps, psl, si)
+        out, lse = attend_with_positions(
+            q.transpose(0, 2, 1, 3), paged_local_view(kp, table),
+            paged_local_view(vp, table),
+            q_positions=positions, kv_positions=kv_pos, kv_len=kv_len,
+            causal=True, window=window, softcap=cfg.attn_logit_softcap)
+        merged = merge_partial_attention(out, lse, seq_ax)
+        return _tp_o_proj(merged, wo_loc, si, hq_s, xb.dtype, plan), kp, vp
+
+    out, k, v = _shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), pool_spec, pool_spec, P(), P(), P()),
+        out_specs=(P(), pool_spec, pool_spec),
+        check_vma=False)(params, x, cache.k, cache.v, page_table,
+                         pos_start, n_valid)
+    return out, KVCache(k, v)

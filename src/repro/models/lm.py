@@ -192,6 +192,35 @@ class LM:
                     [unit_cache() for _ in range(reps)])
         return cache
 
+    def paged_cache_sharding(self, mesh, num_pages: int, page_size: int):
+        """NamedSharding tree for ``init_paged_cache`` under the paged-TP
+        mesh: pool leaves (Hkv, P, ps, D) shard kv heads over the
+        head-group axis and within-page rows over the page-row axis
+        (logical axes ``kv_heads`` / ``page_row`` in sharding/rules.py);
+        scan-stacked segments carry a leading replicated reps dim.  Axes
+        whose dimension does not divide fall back to replicated, so SSM
+        state leaves (if any) stay whole."""
+        from jax.sharding import NamedSharding
+        from repro.sharding.rules import (default_rules, logical_to_spec,
+                                          _divides)
+        rules = dict(default_rules())
+        shapes = jax.eval_shape(
+            lambda: self.init_paged_cache(num_pages, page_size))
+
+        def to_sharding(leaf):
+            logical = ("kv_heads", None, "page_row", None)
+            if leaf.ndim == 5:          # stacked segment: leading reps dim
+                logical = (None,) + logical
+            elif leaf.ndim != 4:
+                return NamedSharding(mesh, jax.sharding.PartitionSpec())
+            spec = logical_to_spec(logical, rules, mesh)
+            fixed = [ax if _divides(leaf.shape[i], mesh, ax) else None
+                     for i, ax in enumerate(spec)]
+            return NamedSharding(mesh,
+                                 jax.sharding.PartitionSpec(*fixed))
+
+        return jax.tree.map(to_sharding, shapes)
+
     def cache_logical(self, batch: int, max_seq: int):
         cfg = self.cfg
         tree = {}

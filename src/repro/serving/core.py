@@ -51,6 +51,7 @@ from repro.serving.pressure import PressureManager, copy_pages
 from repro.serving.scheduler import (ABORTED, FINISHED, PREFILLING, RUNNING,
                                      ContinuousBatchScheduler, Request,
                                      SamplingParams)
+from repro.sharding.tp import plan_tp, tp_context
 
 
 def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
@@ -75,6 +76,22 @@ class StreamEvent(NamedTuple):
     finished: bool        # True on the request's last token
 
 
+class _CountingDeque(deque):
+    """Bounded deque that counts evictions instead of losing them
+    silently: a full ``append`` still drops the oldest entry (the bound
+    is the point), but ``dropped`` records how many orphaned events were
+    lost so ``stats()`` can surface the loss."""
+
+    def __init__(self, maxlen: int):
+        super().__init__(maxlen=maxlen)
+        self.dropped = 0
+
+    def append(self, item) -> None:
+        if self.maxlen is not None and len(self) == self.maxlen:
+            self.dropped += 1
+        super().append(item)
+
+
 class EngineCore:
     """Persistent iteration-level engine over the paged KV cache.
 
@@ -93,8 +110,27 @@ class EngineCore:
         self.params = params
         self.cfg = cfg
         self.serve = serve or ServeConfig()
-        # jitted paged prefill/decode triples keyed by resolved impl;
-        # shared with the ServeEngine wrapper so clearing one clears both
+        # tensor parallelism (sharding/tp.py): factor serve.tp into
+        # kv-head groups x page-row sub-shards and bind a 2-D mesh; the
+        # paged forward fns trace under tp_context, flipping the
+        # attention/MLP layers onto their shard_map TP bodies
+        self.tp_plan = None
+        self.tp_mesh = None
+        if self.serve.tp > 1:
+            from repro.launch.mesh import make_mesh
+            plan = plan_tp(cfg, self.serve.tp, self.serve.page_size,
+                           collectives=self.serve.tp_collectives,
+                           ar_chunks=self.serve.tp_ar_chunks,
+                           first_chunk_frac=self.serve.tp_first_chunk_frac)
+            if jax.device_count() < plan.tp:
+                raise ValueError(
+                    f"tp={plan.tp} needs {plan.tp} devices, "
+                    f"found {jax.device_count()}")
+            self.tp_plan = plan
+            self.tp_mesh = make_mesh(plan.mesh_shape, plan.axes)
+        # jitted paged prefill/decode triples keyed by (resolved impl,
+        # tp plan); shared with the ServeEngine wrapper so clearing one
+        # clears both
         self._paged_fn_cache = fn_cache if fn_cache is not None else {}
         # how many times the chunked-prefill function was *traced* (not
         # called): the trace-count test asserts it stays bounded by
@@ -132,7 +168,8 @@ class EngineCore:
         # events a generate_stream drain stepped out for requests no
         # drain owns (direct add_request users): step() hands each event
         # to exactly one caller, so mixed-mode users recover them here
-        self.orphan_events: deque = deque(maxlen=4096)
+        # (drops past the bound are counted, see stats()["orphans_dropped"])
+        self.orphan_events: _CountingDeque = _CountingDeque(maxlen=4096)
         self.steps = 0
         self.events_emitted = 0
         self.aborts = 0
@@ -158,12 +195,18 @@ class EngineCore:
             "peak_utilization": mgr.peak_utilization,
             "prefill_launches": self.prefill_launches,
             "prefill_trace_count": self.prefill_trace_count,
+            "orphan_events_pending": len(self.orphan_events),
+            "orphans_dropped": self.orphan_events.dropped,
             "pressure": dict(self.pressure.stats),
             "host_pool_pages": self.pressure.host_pool.used_pages,
         }
         if self.prefix is not None:
             out["prefix"] = dict(self.prefix.stats)
             out["prefix_cached_pages"] = self.prefix.cached_pages
+        if self.tp_plan is not None:
+            out["tp"] = {"tp": self.tp_plan.tp, "g": self.tp_plan.g,
+                         "s": self.tp_plan.s,
+                         "collectives": self.tp_plan.collectives}
         return out
 
     # ------------------------------------------------------------------
@@ -270,7 +313,8 @@ class EngineCore:
                 "128 (TPU lane width) for the compiled Pallas paged "
                 "kernel; pick a 128-multiple or paged_impl="
                 "'paged_reference'")
-        if impl not in self._paged_fn_cache:
+        key = (impl, self.tp_plan)
+        if key not in self._paged_fn_cache:
             model = self.model
             core = self
 
@@ -305,11 +349,24 @@ class EngineCore:
                     axis=1)[:, 0]
                 return pools, last
 
-            self._paged_fn_cache[impl] = (
-                jax.jit(pre_scan, donate_argnums=(2,)),
-                jax.jit(pre_chunk, donate_argnums=(2,)),
-                jax.jit(dec, donate_argnums=(2,)))
-        return self._paged_fn_cache[impl]
+            self._paged_fn_cache[key] = tuple(
+                self._tp_wrap(jax.jit(f, donate_argnums=(2,)))
+                for f in (pre_scan, pre_chunk, dec))
+        return self._paged_fn_cache[key]
+
+    def _tp_wrap(self, fn):
+        """Enter the tensor-parallel context around a jitted paged fn so
+        the layer code traces onto its shard_map TP bodies (jit traces at
+        call time; the contextvar must be live then, not at jit time)."""
+        if self.tp_mesh is None:
+            return fn
+        mesh, plan = self.tp_mesh, self.tp_plan
+
+        def wrapped(*args):
+            with tp_context(mesh, plan):
+                return fn(*args)
+
+        return wrapped
 
     # ------------------------------------------------------------------
     # sampling (per-request counter-based RNG)
@@ -346,6 +403,13 @@ class EngineCore:
         if self.pools is None:
             self.pools = self.model.init_paged_cache(self.mgr.num_pages,
                                                      self.mgr.page_size)
+            if self.tp_mesh is not None:
+                # shard the pools over the TP mesh (kv heads over the
+                # head-group axis, within-page rows over the page-row
+                # axis) so each device holds 1/tp of the KV budget
+                sh = self.model.paged_cache_sharding(
+                    self.tp_mesh, self.mgr.num_pages, self.mgr.page_size)
+                self.pools = jax.device_put(self.pools, sh)
 
     def _apply_cow(self) -> None:
         """Replay pending copy-on-write page moves on the device pools:

@@ -50,7 +50,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.serving.paged_cache import PagedKVCache, pages_needed
+from repro.serving.paged_cache import (OutOfPages, PagedKVCache,
+                                       pages_needed)
 
 WAITING, PREFILLING, RUNNING, PREEMPTED, FINISHED, ABORTED = (
     "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED", "ABORTED")

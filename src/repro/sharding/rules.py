@@ -44,6 +44,11 @@ def default_rules(multi_pod: bool = False) -> AxisRules:
         "attn_row": "model",   # QKV/O weight input dim (row-parallel)
         "d_model": None,
         "stage": "pod",
+        # paged tensor-parallel serving (sharding/tp.py): KV page pools
+        # (Hkv, P, page_size, D) shard kv heads over the head-group axis
+        # and within-page rows over the page-row axis
+        "kv_heads": "model",
+        "page_row": "tp_seq",
     })
 
 

@@ -1,0 +1,129 @@
+"""Tensor-parallel plan + context for the paged serving engine.
+
+The paged engine shards attention and the per-layer KV page pools over a
+2-D device mesh ``(axis_heads, axis_seq)``:
+
+  * ``axis_heads`` (size ``g = gcd(tp, num_kv_heads)``) splits the KV
+    heads into groups -- classic Megatron head parallelism; every shard
+    of a group holds the group's full KV rows for its page slice.
+  * ``axis_seq``  (size ``s = tp // g``) splits each KV *page* into
+    ``s`` row sub-shards (the within-page token dimension).  Each
+    sub-shard attends over its own rows only and the partial outputs
+    merge exactly via the log-sum-exp combination of
+    ``core/distributed_decode.py`` -- the same online-softmax
+    decomposition the paper tiles within one NPU, promoted to the mesh.
+
+The factoring means a 4-way mesh still works when the model has only 2
+KV heads (the smoke configs): ``tp=4, Hkv=2 -> g=2, s=2``.  With
+``s == 1`` the seq axis is size 1 and the LSE merge degenerates to the
+identity -- pure head parallelism.
+
+Model code discovers the active plan through a contextvar
+(``current_tp()``); ``EngineCore._paged_fns`` enters ``tp_context`` at
+trace time, so the same layer code serves the single-device and the
+sharded engine.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.config import ModelConfig
+
+AXIS_HEADS = "model"      # kv-head groups (the ISSUE's `model` axis)
+AXIS_SEQ = "tp_seq"       # within-page row sub-shards
+
+
+@dataclass(frozen=True)
+class TPPlan:
+    """Static tensor-parallel factoring (frozen: jit-cache key)."""
+    g: int                       # kv-head groups over AXIS_HEADS
+    s: int                       # page-row sub-shards over AXIS_SEQ
+    collectives: str = "tiled"   # O-proj/down-proj allreduce: tiled|single
+    ar_chunks: int = 4
+    first_chunk_frac: float = 0.5
+
+    @property
+    def tp(self) -> int:
+        return self.g * self.s
+
+    @property
+    def axes(self):
+        """Mesh axis names, reduction order (heads, seq)."""
+        return (AXIS_HEADS, AXIS_SEQ)
+
+    @property
+    def mesh_shape(self):
+        return (self.g, self.s)
+
+
+def plan_tp(cfg: ModelConfig, tp: int, page_size: int, *,
+            collectives: str = "tiled", ar_chunks: int = 4,
+            first_chunk_frac: float = 0.5) -> TPPlan:
+    """Factor ``tp`` into (kv-head groups) x (page-row sub-shards) and
+    validate the shapes divide.  Raises ValueError on impossible
+    combinations rather than silently mis-sharding."""
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if collectives not in ("tiled", "single"):
+        raise ValueError(f"tp_collectives must be 'tiled' or 'single', "
+                         f"got {collectives!r}")
+    g = math.gcd(tp, cfg.num_kv_heads)
+    s = tp // g
+    if cfg.num_heads % cfg.num_kv_heads:
+        raise ValueError(
+            f"GQA requires num_heads ({cfg.num_heads}) divisible by "
+            f"num_kv_heads ({cfg.num_kv_heads})")
+    hq_group = cfg.num_heads // g
+    if hq_group % s:
+        raise ValueError(
+            f"tp={tp}: the {hq_group} query heads of each of the {g} "
+            f"kv-head groups do not split over {s} page-row sub-shards "
+            f"(O-proj is row-parallel over query-head slices)")
+    if page_size % s:
+        raise ValueError(
+            f"tp={tp}: page_size={page_size} does not split into {s} "
+            f"page-row sub-shards; pick a page size divisible by "
+            f"tp // gcd(tp, num_kv_heads)")
+    return TPPlan(g=g, s=s, collectives=collectives, ar_chunks=ar_chunks,
+                  first_chunk_frac=first_chunk_frac)
+
+
+@dataclass(frozen=True)
+class TPContext:
+    """An active plan bound to its device mesh."""
+    mesh: Mesh
+    plan: TPPlan
+
+
+_TP: contextvars.ContextVar = contextvars.ContextVar("tp_context",
+                                                     default=None)
+
+
+@contextlib.contextmanager
+def tp_context(mesh: Mesh, plan: TPPlan):
+    """Activate tensor parallelism for model code traced inside.
+
+    Entered by ``EngineCore._paged_fns`` around the paged forward
+    functions; ``layers/attention.py`` and ``layers/mlp.py`` read it at
+    trace time and switch to their shard_map TP bodies.
+    """
+    for ax, size in zip(plan.axes, plan.mesh_shape):
+        if mesh.shape.get(ax) != size:
+            raise ValueError(
+                f"mesh axis {ax!r} has size {mesh.shape.get(ax)}, "
+                f"plan needs {size} (mesh {dict(mesh.shape)})")
+    token = _TP.set(TPContext(mesh=mesh, plan=plan))
+    try:
+        yield
+    finally:
+        _TP.reset(token)
+
+
+def current_tp() -> Optional[TPContext]:
+    return _TP.get()

@@ -172,3 +172,80 @@ rel = float(jnp.max(jnp.abs(red[0] - true_mean))) / \
 print(json.dumps({'rel': rel}))
 """)
     assert r["rel"] < 0.15   # one-shot int8 error (EF recovers it over steps)
+
+
+def test_chunk_sizes_alignment_contract():
+    """Every chunk -- including the trailing remainder -- must respect
+    ``align``.  The old code appended a raw remainder, e.g.
+    chunk_sizes(10, 2, 1.0, 4) -> [4, 6]: the 6 mis-split the ring's
+    per-device pieces and psum_scatter's axis chunks."""
+    from repro.core.tiled_allreduce import chunk_sizes
+
+    # the regression shape now refuses instead of mis-aligning
+    with pytest.raises(ValueError):
+        chunk_sizes(10, 2, 1.0, align=4)
+    with pytest.raises(ValueError):
+        chunk_sizes(0, 4)
+    for total, n, frac, align in [(16, 2, 1.0, 4), (64, 4, 0.5, 8),
+                                  (8, 4, 0.5, 4), (128, 4, 0.5, 1),
+                                  (12, 5, 0.25, 4), (4, 4, 0.5, 4),
+                                  (96, 3, 0.5, 32)]:
+        sizes = chunk_sizes(total, n, frac, align=align)
+        assert sum(sizes) == total, (total, n, frac, align, sizes)
+        assert all(s > 0 for s in sizes), sizes
+        assert all(s % align == 0 for s in sizes), (align, sizes)
+        assert len(sizes) <= n
+    # first-chunk shrinking still happens when there is room
+    sizes = chunk_sizes(128, 4, 0.5, align=1)
+    assert sizes[0] < sizes[1]
+
+
+def test_allreduce_variants_match_on_unaligned_rows():
+    """Equivalence on row counts that divide NEITHER the chunk count nor
+    the axis size, across 2- and 4-way meshes: the ring variant pads to
+    a multiple of the axis size internally and slices the pad back off;
+    the reduce-scatter variant refuses rather than mis-splitting."""
+    r = run_child(CHILD_PRELUDE + """
+import functools
+from repro.core.tiled_allreduce import (tiled_matmul_allreduce,
+    single_matmul_allreduce, ring_matmul_allreduce,
+    tiled_matmul_reducescatter, matmul_allreduce)
+rng = np.random.default_rng(0)
+w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+errs = {}
+for ways in (2, 4):
+    mesh = make_mesh((ways,), ('model',))
+    for t in (37, 50):
+        x = jnp.asarray(rng.normal(size=(t, 32)), jnp.float32)
+        ref = x @ w
+        for name, fn in [('single', single_matmul_allreduce),
+                         ('tiled', tiled_matmul_allreduce),
+                         ('ring', ring_matmul_allreduce)]:
+            f = shard_map(functools.partial(fn, axis_name='model'),
+                mesh=mesh, in_specs=(P(None,'model'), P('model',None)),
+                out_specs=P(None,None), check_vma=False)
+            errs[f'{name}-{ways}w-{t}'] = float(jnp.max(jnp.abs(
+                jax.jit(f)(x, w) - ref)))
+        # dispatcher parity on the same shapes
+        for mode in ('tiled', 'single'):
+            f = shard_map(functools.partial(matmul_allreduce,
+                axis_name='model', mode=mode), mesh=mesh,
+                in_specs=(P(None,'model'), P('model',None)),
+                out_specs=P(None,None), check_vma=False)
+            errs[f'dispatch-{mode}-{ways}w-{t}'] = float(jnp.max(jnp.abs(
+                jax.jit(f)(x, w) - ref)))
+    # reduce-scatter refuses axis-indivisible rows instead of corrupting
+    x = jnp.asarray(rng.normal(size=(37, 32)), jnp.float32)
+    f = shard_map(functools.partial(tiled_matmul_reducescatter,
+        axis_name='model'), mesh=mesh,
+        in_specs=(P(None,'model'), P('model',None)),
+        out_specs=P('model',None), check_vma=False)
+    try:
+        jax.jit(f)(x, w)
+        errs[f'rs-guard-{ways}w'] = 1e9
+    except ValueError:
+        errs[f'rs-guard-{ways}w'] = 0.0
+print(json.dumps(errs))
+""")
+    for name, err in r.items():
+        assert err < 1e-4, (name, err)

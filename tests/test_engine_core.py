@@ -611,3 +611,25 @@ def test_legacy_global_knobs_warn_exactly_once(built):
                      sampling=SamplingParams(max_new_tokens=3))
     list(engine.generate_stream([sp_req]))
     assert sp_req.generated == reqs[0].generated
+
+
+def test_orphan_event_drops_are_counted(built):
+    """The orphan-event buffer is bounded (dropping the oldest is the
+    point), but drops must not be silent: stats() reports how many
+    orphaned events were lost past the 4096-entry window."""
+    from repro.serving.core import StreamEvent
+    core, _ = _core(built, num_pages=13)
+    assert core.stats()["orphans_dropped"] == 0
+    cap = core.orphan_events.maxlen
+    for i in range(cap + 7):
+        core.orphan_events.append(StreamEvent(0, i, i, False))
+    st = core.stats()
+    assert len(core.orphan_events) == cap
+    assert st["orphan_events_pending"] == cap
+    assert st["orphans_dropped"] == 7
+    # the oldest 7 fell off the window; the newest survive in order
+    assert core.orphan_events[0].token == 7
+    assert core.orphan_events[-1].token == cap + 6
+    # reset() starts a fresh buffer and counter
+    core.reset()
+    assert core.stats()["orphans_dropped"] == 0

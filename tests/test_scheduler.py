@@ -276,3 +276,36 @@ def test_pool_too_small_raises(tiny_engine):
     req = Request(id=0, prompt=np.arange(10), max_new_tokens=30)
     with pytest.raises(ValueError, match="pool"):
         list(engine.generate_stream([req]))
+
+
+def test_swap_resume_admission_out_of_pages_propagates():
+    """Regression: the swap-resume admission branch catches OutOfPages --
+    which was never imported into the module, so an actually-dry pool
+    raised NameError from the except clause itself.  Drive a swap-resume
+    admission into a pool whose append runs dry and assert the real
+    exception propagates with the slot cleanly released."""
+    from repro.serving.paged_cache import OutOfPages
+
+    cache = PagedKVCache(num_pages=16, page_size=4, max_slots=2,
+                         max_pages_per_seq=8)
+    sched = ContinuousBatchScheduler(cache)
+    req = _req(0, 8, 8)
+    sched.submit(req)
+    # fake a swap preemption: KV stashed to host, request queued to resume
+    sched.waiting.clear()
+    req.state = "PREEMPTED"
+    req.resume_kind = "swap"
+    req.resume_len = 8
+    sched.resuming.append(req)
+
+    def dry_append(slot, n):
+        raise OutOfPages("pool drained between headroom check and append")
+
+    cache.append = dry_append
+    with pytest.raises(OutOfPages):
+        sched.admit()
+    del cache.append                     # restore the real method
+    # clean failure: no leaked slot, no leaked pages
+    assert all(r is None for r in sched.slots)
+    assert cache.used_pages == 0
+    cache.check_invariants()
