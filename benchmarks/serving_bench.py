@@ -35,6 +35,13 @@ regress against):
   arrive *while* the engine runs, instead of all up front.  Reports
   TTFT and TPOT (time per output token) p50/p99 -- the latency numbers
   an iteration-level engine exists for.
+* **degradation** -- over-offered Poisson load (arrivals faster than
+  the engine drains) through ``EngineCore.step()``, unbounded vs
+  bounded (``max_waiting`` + ``queue_policy="shed_oldest"`` +
+  per-request ``deadline_ms``).  Reports shed rate, timed-out count and
+  the *survivors'* TTFT/TPOT p99 both ways: load shedding must keep the
+  survivor tail flat while the unbounded engine's queueing latency
+  grows without bound.
 * **distributed** -- tensor-parallel serving on a forced multi-device
   CPU mesh (a child process under
   ``XLA_FLAGS=--xla_force_host_platform_device_count=4``): the paged
@@ -491,6 +498,126 @@ def open_loop(arch: str = "gemma2-2b", n_requests: int = 10,
     }
 
 
+def degradation(arch: str = "gemma2-2b", n_requests: int = 14,
+                max_batch: int = 3, page_size: int = 0,
+                max_seq_len: int = 96, mean_gap_steps: float = 0.5,
+                deadline_ms: float = 1000.0, max_waiting: int = 2,
+                seed: int = 0, smoke: bool = True, built=None) -> dict:
+    """Graceful degradation under over-offered load: the same seeded
+    Poisson arrival schedule (arrivals ~2x faster than the engine
+    drains) driven through ``EngineCore.step()`` twice -- once
+    *unbounded* (every request queues forever, no deadline) and once
+    *bounded* (``max_waiting`` + ``queue_policy="shed_oldest"`` +
+    per-request ``deadline_ms``).  The unbounded engine completes
+    everything at the cost of unbounded queueing latency; the bounded
+    engine sheds excess load with structured errors and keeps the
+    survivors' TTFT/TPOT tail flat.  The CI artifact check gates on the
+    survivors' p99 not regressing past the unbounded baseline."""
+    page_size = page_size or (
+        128 if jax.default_backend() == "tpu" else 16)
+    max_seq_len = max(max_seq_len, 4 * page_size)
+    cfg, model, params = built or _build(arch, smoke)
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(
+        rng.exponential(scale=mean_gap_steps, size=n_requests))).astype(int)
+    specs = [(rng.integers(0, cfg.vocab_size,
+                           size=int(rng.integers(4, max_seq_len // 3))),
+              int(rng.integers(6, 14))) for _ in range(n_requests)]
+
+    def drive(bounded: bool) -> dict:
+        serve = ServeConfig(
+            max_batch=max_batch, max_seq_len=max_seq_len,
+            page_size=page_size, num_pages=max_batch * 3 + 1,
+            max_waiting=max_waiting if bounded else 0,
+            queue_policy="shed_oldest")
+        core = EngineCore(model, params, cfg, serve)
+        # warmup: decode + every chunk-launch width, then reset state
+        wid = 0
+        for w in (1, 2, max_batch):
+            for i in range(w):
+                wid -= 1
+                core.add_request(
+                    rng.integers(0, cfg.vocab_size, size=3 + i),
+                    SamplingParams(max_new_tokens=2), request_id=wid)
+            while core.has_work:
+                core.step()
+        core.reset()
+
+        t_arrive, t_first, t_last, n_toks = {}, {}, {}, {}
+        next_req, step_idx, waiting_hw = 0, 0, 0
+        t0 = time.perf_counter()
+        while next_req < n_requests or core.has_work:
+            while next_req < n_requests and arrivals[next_req] <= step_idx:
+                prompt, n = specs[next_req]
+                sp = SamplingParams(
+                    max_new_tokens=n,
+                    deadline_ms=deadline_ms if bounded else None)
+                core.add_request(prompt, sp, request_id=next_req)
+                t_arrive[next_req] = time.perf_counter()
+                next_req += 1
+            for ev in core.step():
+                if ev.kind != "token":
+                    continue
+                now = time.perf_counter()
+                t_first.setdefault(ev.request_id, now)
+                t_last[ev.request_id] = now
+                n_toks[ev.request_id] = n_toks.get(ev.request_id, 0) + 1
+            waiting_hw = max(waiting_hw, len(core.sched.waiting))
+            step_idx += 1
+        wall = time.perf_counter() - t0
+        assert core.mgr.used_pages == 0, "pages leaked after drain"
+
+        stats = core.stats()
+        health = stats["health"]
+        done = sorted(r.id for r in core.sched.finished if r.id >= 0)
+        ttft = np.asarray([t_first[i] - t_arrive[i] for i in done])
+        tpot = np.asarray([(t_last[i] - t_first[i]) / (n_toks[i] - 1)
+                           for i in done if n_toks.get(i, 0) > 1])
+        total = sum(n_toks.values())
+        out = {
+            "completed": len(done),
+            "shed": health["shed"],
+            "timed_out": health["timed_out"],
+            "failed": health["failed"],
+            "waiting_high_water": waiting_hw,
+            "engine_steps": stats["steps"],
+            "generated_tokens": total,
+            "wall_s": round(wall, 3),
+            "survivor_ttft_p50_s": round(
+                float(np.percentile(ttft, 50)), 4),
+            "survivor_ttft_p99_s": round(
+                float(np.percentile(ttft, 99)), 4),
+            "survivor_tpot_p50_s": round(
+                float(np.percentile(tpot, 50)), 4),
+            "survivor_tpot_p99_s": round(
+                float(np.percentile(tpot, 99)), 4),
+            "step_s_high_water": round(health["step_s_high_water"], 4),
+        }
+        if bounded:
+            out["shed_rate"] = round(
+                (health["shed"] + health["timed_out"]) / n_requests, 3)
+        return out
+
+    report = {
+        "requests": n_requests,
+        "mean_gap_steps": mean_gap_steps,
+        "deadline_ms": deadline_ms,
+        "max_waiting": max_waiting,
+        "queue_policy": "shed_oldest",
+        "unbounded": drive(False),
+        "bounded": drive(True),
+    }
+    b, u = report["bounded"], report["unbounded"]
+    assert u["completed"] == n_requests, "unbounded baseline lost requests"
+    assert b["completed"] + b["shed"] + b["timed_out"] == n_requests
+    report["survivor_ttft_p99_ratio"] = round(
+        b["survivor_ttft_p99_s"] / u["survivor_ttft_p99_s"], 3)
+    report["survivor_tpot_p99_ratio"] = round(
+        b["survivor_tpot_p99_s"] / u["survivor_tpot_p99_s"], 3)
+    return report
+
+
 def _distributed_child(arch: str, n_requests: int, seed: int,
                        smoke: bool = True) -> None:
     """Runs INSIDE the forced-multi-device child process: tp=1 oracle,
@@ -608,6 +735,13 @@ def main():
     ap.add_argument("--skip-open-loop", action="store_true",
                     help="skip the open-loop EngineCore section")
     ap.add_argument("--open-loop-requests", type=int, default=10)
+    ap.add_argument("--skip-degradation", action="store_true",
+                    help="skip the load-shedding degradation section")
+    ap.add_argument("--degradation-requests", type=int, default=14)
+    ap.add_argument("--deadline-ms", type=float, default=1000.0,
+                    help="per-request deadline in the bounded run")
+    ap.add_argument("--max-waiting", type=int, default=2,
+                    help="waiting-queue bound in the bounded run")
     ap.add_argument("--skip-distributed", action="store_true",
                     help="skip the tensor-parallel serving section")
     ap.add_argument("--distributed-requests", type=int, default=6)
@@ -666,6 +800,14 @@ def main():
             arch=args.arch, n_requests=args.open_loop_requests,
             page_size=args.page_size,
             mean_gap_steps=args.mean_gap_steps, seed=args.seed,
+            smoke=not args.full)
+    if not args.skip_degradation:
+        # over-offered load, unbounded vs deadline+shed bounded engine:
+        # the survivors' latency tail must not regress under shedding
+        report["degradation"] = degradation(
+            arch=args.arch, n_requests=args.degradation_requests,
+            page_size=args.page_size, deadline_ms=args.deadline_ms,
+            max_waiting=args.max_waiting, seed=args.seed,
             smoke=not args.full)
     if not args.skip_distributed:
         # tensor-parallel engine on a forced multi-device CPU mesh:

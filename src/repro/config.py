@@ -304,6 +304,29 @@ class ServeConfig:
     # reclaimed whenever the free list runs low.
     prefix_cache_pages: int = 0
 
+    # --- fault tolerance & graceful degradation (serving/faults.py) -----
+    # Non-finite (NaN/Inf) logits: "fail" quarantines only the offending
+    # request (terminal FAILED state + a structured error event, pages
+    # freed, co-tenants untouched); "ignore" keeps the pre-guard
+    # behaviour (argmax over a NaN row is garbage-but-defined).
+    logit_guard: str = "fail"
+    # Bound on the waiting queue (0 = unbounded, the legacy behaviour).
+    # An over-offered engine then degrades by policy instead of queueing
+    # without limit.
+    max_waiting: int = 0
+    # What a full waiting queue does to the next submit: "reject" raises
+    # a structured RequestRejected at add_request; "shed_oldest" fails
+    # the oldest waiting request (error event) and admits the newcomer.
+    queue_policy: str = "reject"
+    # Transient swap DMA failures (device<->host page copies) are
+    # retried this many times with bounded exponential backoff before
+    # the victim is downgraded to recompute via the preemption cost
+    # path -- a swap fault never fails the request.
+    swap_retries: int = 3
+    # Base of the retry backoff (seconds); attempt k sleeps
+    # min(base * 2**k, 0.1).  0 disables sleeping (tests).
+    swap_retry_backoff_s: float = 0.0
+
     # --- tensor parallelism (sharding/tp.py) ----------------------------
     # Device count to shard attention + KV page pools over.  Factored as
     # gcd(tp, num_kv_heads) kv-head groups x within-page row sub-shards

@@ -26,6 +26,7 @@ from repro.launch.mesh import make_mesh_for
 from repro.models import build_model
 from repro.serving.core import EngineCore
 from repro.serving.engine import ServeEngine
+from repro.serving.faults import RequestRejected
 from repro.serving.scheduler import SamplingParams
 from repro.sharding.rules import axis_rules
 
@@ -38,24 +39,37 @@ def _run_stream(model, params, cfg, args) -> None:
     serve = ServeConfig(
         max_batch=min(4, args.requests),
         max_seq_len=args.prompt_len + args.gen + page_size,
-        page_size=page_size)
+        page_size=page_size,
+        max_waiting=args.max_waiting,
+        queue_policy=args.queue_policy)
     core = EngineCore(model, params, cfg, serve)
     rng = np.random.default_rng(0)
     # --top-k 1 (the dense-path greedy default) would make the "sampled"
     # requests greedy too; give them a real truncation instead
     stream_top_k = args.top_k if args.top_k not in (0, 1) else 8
+    deadline = args.deadline_ms if args.deadline_ms > 0 else None
     for i in range(args.requests):
         if i % 3 == 2:
             sp = SamplingParams(temperature=0.8, top_k=stream_top_k,
-                                seed=i, max_new_tokens=args.gen)
+                                seed=i, max_new_tokens=args.gen,
+                                deadline_ms=deadline)
         else:
-            sp = SamplingParams(max_new_tokens=args.gen)   # greedy
-        core.add_request(rng.integers(0, cfg.vocab_size,
-                                      size=args.prompt_len), sp)
+            sp = SamplingParams(max_new_tokens=args.gen,
+                                deadline_ms=deadline)   # greedy
+        try:
+            core.add_request(rng.integers(0, cfg.vocab_size,
+                                          size=args.prompt_len), sp)
+        except RequestRejected as e:
+            # queue_policy="reject" surfaces a structured error at
+            # submission; the engine keeps serving what it admitted
+            print(f"rejected: {e.detail}")
     t0 = time.perf_counter()
     n_events = 0
     while core.has_work:
         for ev in core.step():
+            if ev.kind == "error":
+                print(f"req {ev.request_id} failed: {ev.detail}")
+                continue
             n_events += 1
             if ev.finished:
                 print(f"req {ev.request_id} finished "
@@ -67,6 +81,13 @@ def _run_stream(model, params, cfg, args) -> None:
           f"{s['pages_peak']}/{core.mgr.usable_pages} pages "
           f"({s['peak_utilization']:.0%}), "
           f"{s['pressure']['preemptions']} preemptions")
+    h = s["health"]
+    print(f"health: {h['failed']} failed, {h['shed']} shed, "
+          f"{h['timed_out']} timed out, {h['swap_retries']} swap retries "
+          f"({h['swap_fail_downgrades']} downgraded to recompute), "
+          f"slowest step {h['step_s_high_water'] * 1e3:.1f}ms"
+          + (f", last error: {h['last_error']}" if h["last_error"]
+             else ""))
 
 
 def main(argv=None):
@@ -83,6 +104,15 @@ def main(argv=None):
                          "(add_request/step) instead of dense generate")
     ap.add_argument("--requests", type=int, default=8,
                     help="requests to stream (with --stream)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline in ms (0 = none; expired "
+                         "requests are shed with a structured timeout)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="bound on the waiting queue (0 = unbounded)")
+    ap.add_argument("--queue-policy", default="reject",
+                    choices=["reject", "shed_oldest"],
+                    help="full-queue policy: reject new arrivals or "
+                         "shed the oldest waiting request")
     args = ap.parse_args(argv)
 
     cfg = get_model_config(args.arch)

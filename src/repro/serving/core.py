@@ -35,6 +35,7 @@ greedy output is bit-identical to the pre-core engine.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from collections import deque
 from typing import Dict, List, NamedTuple, Optional
@@ -45,12 +46,15 @@ import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 from repro.core.fastattention import default_paged_impl
+from repro.serving.faults import (EngineError, InjectedFault, LogitError,
+                                  RequestError, RequestRejected,
+                                  RequestTimeout, SwapRestoreFailed)
 from repro.serving.paged_cache import OutOfPages, PagedKVCache
 from repro.serving.prefix_cache import RadixPrefixIndex
 from repro.serving.pressure import PressureManager, copy_pages
-from repro.serving.scheduler import (ABORTED, FINISHED, PREFILLING, RUNNING,
-                                     ContinuousBatchScheduler, Request,
-                                     SamplingParams)
+from repro.serving.scheduler import (ABORTED, FAILED, FINISHED, PREFILLING,
+                                     RUNNING, ContinuousBatchScheduler,
+                                     Request, SamplingParams)
 from repro.sharding.tp import plan_tp, tp_context
 
 
@@ -69,11 +73,18 @@ def sample_token(logits, key, *, temperature: float = 1.0, top_k: int = 0):
 
 
 class StreamEvent(NamedTuple):
-    """One generated token, emitted the step it exists."""
+    """One stream event.  ``kind="token"`` (the default, and the only
+    kind before the fault-tolerance layer) carries one generated token,
+    emitted the step it exists.  ``kind="stop"`` terminates a
+    stop-string request whose matched suffix was trimmed (token is -1).
+    ``kind="error"`` terminates a FAILED/shed/timed-out request with the
+    structured ``detail`` ("code: message") and token -1."""
     request_id: int
     token: int
     index: int            # position within the request's generation
-    finished: bool        # True on the request's last token
+    finished: bool        # True on the request's last event
+    kind: str = "token"
+    detail: str = ""
 
 
 class _CountingDeque(deque):
@@ -105,11 +116,26 @@ class EngineCore:
 
     def __init__(self, model, params, cfg: ModelConfig,
                  serve: Optional[ServeConfig] = None, *,
-                 fn_cache: Optional[dict] = None):
+                 fn_cache: Optional[dict] = None, injector=None,
+                 detokenize=None, clock=None):
         self.model = model
         self.params = params
         self.cfg = cfg
         self.serve = serve or ServeConfig()
+        if self.serve.logit_guard not in ("fail", "ignore"):
+            raise ValueError(
+                f"unknown logit_guard {self.serve.logit_guard!r}")
+        if self.serve.queue_policy not in ("reject", "shed_oldest"):
+            raise ValueError(
+                f"unknown queue_policy {self.serve.queue_policy!r}")
+        # fault-injection harness (serving/faults.py): threaded through
+        # the page manager and pressure manager; None costs nothing
+        self.injector = injector
+        # token ids -> text, required only by SamplingParams.stop_strings
+        self.detokenize = detokenize
+        # engine clock for deadlines (seconds, monotonic); injectable so
+        # deadline tests are deterministic
+        self._clock = clock or time.monotonic
         # tensor parallelism (sharding/tp.py): factor serve.tp into
         # kv-head groups x page-row sub-shards and bind a 2-D mesh; the
         # paged forward fns trace under tp_context, flipping the
@@ -152,7 +178,8 @@ class EngineCore:
         counters survive (they are keyed by shapes, not state)."""
         serve = self.serve
         self.mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
-                                serve.max_batch, serve.max_pages_per_seq)
+                                serve.max_batch, serve.max_pages_per_seq,
+                                injector=self.injector)
         self.prefix = (RadixPrefixIndex(self.mgr, serve.page_size,
                                         serve.prefix_cache_pages)
                        if serve.prefix_cache else None)
@@ -161,7 +188,8 @@ class EngineCore:
             watermark_pages=serve.watermark, prefix_cache=self.prefix)
         self.pressure = PressureManager(self.cfg, serve, self.mgr,
                                         self.sched,
-                                        prefix_cache=self.prefix)
+                                        prefix_cache=self.prefix,
+                                        injector=self.injector)
         self.pools = None              # device pools, materialised lazily
         self.next_tok = np.zeros((serve.max_batch,), np.int32)
         self.requests: Dict[int, Request] = {}     # live (unfinished) only
@@ -173,6 +201,19 @@ class EngineCore:
         self.steps = 0
         self.events_emitted = 0
         self.aborts = 0
+        # -- fault-tolerance state -------------------------------------
+        # terminal error events produced outside a step() (queue
+        # shedding at submit time): the next step() returns them first
+        self._pending_events: List[StreamEvent] = []
+        # per-request incremental detokenisation state for stop_strings:
+        # id -> {"text": decoded generation, "ends": char offset at the
+        # end of each generated token}
+        self._stop_state: Dict[int, dict] = {}
+        self.failed_count = 0          # quarantined (internal/logits/...)
+        self.shed_count = 0            # load-shed from the bounded queue
+        self.timed_out_count = 0       # deadline_ms expiries
+        self.last_error: Optional[str] = None
+        self.step_s_high_water = 0.0   # slowest step() wall-clock ever
 
     @property
     def has_work(self) -> bool:
@@ -199,7 +240,19 @@ class EngineCore:
             "orphans_dropped": self.orphan_events.dropped,
             "pressure": dict(self.pressure.stats),
             "host_pool_pages": self.pressure.host_pool.used_pages,
+            "health": {
+                "failed": self.failed_count,
+                "shed": self.shed_count,
+                "timed_out": self.timed_out_count,
+                "swap_retries": self.pressure.stats["swap_retries"],
+                "swap_fail_downgrades":
+                    self.pressure.stats["swap_fail_downgrades"],
+                "last_error": self.last_error,
+                "step_s_high_water": self.step_s_high_water,
+            },
         }
+        if self.injector is not None:
+            out["injected_faults"] = self.injector.stats()
         if self.prefix is not None:
             out["prefix"] = dict(self.prefix.stats)
             out["prefix_cached_pages"] = self.prefix.cached_pages
@@ -237,13 +290,35 @@ class EngineCore:
     def submit_request(self, req: Request, *, seed_offset: int = 0
                        ) -> Request:
         """Validate and enqueue a pre-built ``Request`` (the
-        generate_stream compatibility path).  Raises ValueError when the
-        request can never fit the pool or its id collides with a live
-        request."""
+        generate_stream compatibility path).  Raises ``RequestRejected``
+        (a ValueError) when the request can never fit the pool, needs a
+        missing detokenizer for its stop_strings, or the bounded waiting
+        queue is full under ``queue_policy="reject"``; plain ValueError
+        when its id collides with a live request.  Under
+        ``queue_policy="shed_oldest"`` a full queue sheds its oldest
+        waiting request instead (structured error event on the next
+        step)."""
         live = self.requests.get(req.id)
-        if live is not None and live.state not in (FINISHED, ABORTED):
+        if live is not None and live.state not in (FINISHED, ABORTED,
+                                                   FAILED):
             raise ValueError(f"request id {req.id} is already live")
         self._resolve_sampling(req, seed_offset)
+        if req.sampling.stop_strings and self.detokenize is None:
+            raise RequestRejected(
+                f"request {req.id}: stop_strings need a detokenize= "
+                "callable on the engine", request_id=req.id)
+        mw = self.serve.max_waiting
+        if mw and len(self.sched.waiting) >= mw:
+            if self.serve.queue_policy == "reject":
+                raise RequestRejected(
+                    f"request {req.id}: waiting queue full "
+                    f"({mw} requests)", request_id=req.id)
+            victim = self.sched.waiting[0]   # shed_oldest
+            self._quarantine(victim, RequestRejected(
+                f"request {victim.id}: shed from full waiting queue "
+                f"({mw} requests) by newer arrival",
+                request_id=victim.id))
+        req.submit_t = self._clock()
         self.sched.submit(req)          # validates against the pool
         self.requests[req.id] = req
         return req
@@ -287,8 +362,46 @@ class EngineCore:
         if self.pressure.holds(request_id):
             self.pressure.drop(request_id, reason="abort")
         self.requests.pop(request_id, None)
+        self._stop_state.pop(request_id, None)
         self.aborts += 1
         return True
+
+    # ------------------------------------------------------------------
+    # fault isolation
+    # ------------------------------------------------------------------
+    def _quarantine(self, req: Request, exc: Exception,
+                    events: Optional[List[StreamEvent]] = None) -> None:
+        """Fail exactly one request in place: its slot's pages are freed
+        (shared prefix pages decref'd), its pending COW debts cancelled,
+        any host swap stash dropped, and a terminal ``kind="error"``
+        event emitted -- co-tenant requests keep serving and their
+        outputs are unchanged (greedy sampling is batch-composition
+        invariant).  ``events=None`` queues the event for the next
+        ``step()`` (submit-time shedding has no step underway)."""
+        if isinstance(exc, RequestError):
+            detail = exc.detail
+        elif isinstance(exc, InjectedFault):
+            detail = f"injected: {exc}"
+        else:
+            detail = f"internal: {exc}"
+        self.sched.abort(req.id)        # frees slot/pages/COW wherever it is
+        if self.pressure.holds(req.id):
+            self.pressure.drop(req.id, reason="fail")
+        req.state = FAILED
+        req.error = detail
+        req.slot = None
+        self.requests.pop(req.id, None)
+        self._stop_state.pop(req.id, None)
+        if isinstance(exc, RequestTimeout):
+            self.timed_out_count += 1
+        elif isinstance(exc, RequestRejected):
+            self.shed_count += 1
+        else:
+            self.failed_count += 1
+        self.last_error = f"request {req.id}: {detail}"
+        ev = StreamEvent(req.id, -1, len(req.generated), True,
+                         kind="error", detail=detail)
+        (events if events is not None else self._pending_events).append(ev)
 
     # ------------------------------------------------------------------
     # jitted paged functions
@@ -386,15 +499,110 @@ class EngineCore:
                            temperature=sp.temperature, top_k=sp.top_k)
         return int(np.asarray(tok).ravel()[0])
 
-    def _first_token(self, req: Request, slot: int,
-                     last_logits) -> StreamEvent:
-        """Sample a freshly-prefilled sequence's first token and flip the
-        request into the decoding state."""
+    def _fire(self, site: str) -> None:
+        if self.injector is not None:
+            self.injector.fire(site)
+
+    def _guard_logits(self, req: Request, row) -> None:
+        """NaN/Inf guard on one request's logits row: under
+        ``logit_guard="fail"`` a non-finite row fails only the offending
+        request (LogitError -> quarantine); "ignore" samples through it
+        (argmax of all-NaN picks index 0 -- garbage, but contained)."""
+        if self.serve.logit_guard != "fail":
+            return
+        if not bool(np.asarray(jnp.all(jnp.isfinite(row)))):
+            raise LogitError(
+                f"request {req.id}: non-finite logits at token "
+                f"{len(req.generated)}", request_id=req.id)
+
+    def _first_token(self, req: Request, slot: int, last_logits,
+                     events: List[StreamEvent]) -> None:
+        """Sample a freshly-prefilled sequence's first token and flip
+        the request into the decoding state.  Sampling faults (injected,
+        non-finite logits) quarantine this request only."""
+        try:
+            self._fire("sample")
+            self._guard_logits(req, last_logits)
+            tok = self._sample(req, last_logits)
+        except (InjectedFault, RequestError) as e:
+            self._quarantine(req, e, events)
+            return
         req.state = RUNNING
-        tok = self._sample(req, last_logits)
         req.generated.append(tok)
         self.next_tok[slot] = tok
-        return StreamEvent(req.id, tok, 0, req.done)
+        self._stream(req, events)
+
+    # ------------------------------------------------------------------
+    # event emission (stop-string holdback)
+    # ------------------------------------------------------------------
+    def _stream(self, req: Request, events: List[StreamEvent]) -> None:
+        """Emit the request's not-yet-streamed generated tokens.
+
+        Without stop_strings every new token streams immediately (the
+        pre-existing behaviour, bit for bit).  With stop_strings the
+        generation is detokenised incrementally; a match ends the
+        request with the matched suffix trimmed from the stream, and
+        while no match exists the longest text suffix that is a prefix
+        of some stop string is *held back* -- a stop string spanning a
+        token boundary must never be half-emitted.  Held tokens flush
+        when the request finishes for another reason (stop token id,
+        max_new_tokens)."""
+        gen = req.generated
+        sp = req.sampling
+        if not sp.stop_strings:
+            while req.emitted < len(gen):
+                i = req.emitted
+                fin = req.done and i == len(gen) - 1
+                events.append(StreamEvent(req.id, gen[i], i, fin))
+                req.emitted += 1
+            return
+        st = self._stop_state.setdefault(req.id, {"text": "", "ends": []})
+        for i in range(len(st["ends"]), len(gen)):
+            # cumulative-prefix decode: piece i is whatever text the
+            # i-th token added (robust to multi-token glyphs)
+            st["text"] = self.detokenize(gen[:i + 1])
+            st["ends"].append(len(st["text"]))
+        text, ends = st["text"], st["ends"]
+        match = -1
+        for s in sp.stop_strings:
+            p = text.find(s)
+            if p != -1 and (match == -1 or p < match):
+                match = p
+        if match != -1:
+            # emit tokens wholly before the match; the token containing
+            # the match start is trimmed with the rest of the suffix
+            safe = sum(1 for e in ends if e <= match)
+            while req.emitted < safe:
+                i = req.emitted
+                events.append(StreamEvent(req.id, gen[i], i, False))
+                req.emitted += 1
+            req.stop_matched = True     # terminal: done is now True
+            matched = max((s for s in sp.stop_strings
+                           if text.startswith(s, match)), key=len)
+            events.append(StreamEvent(req.id, -1, req.emitted, True,
+                                      kind="stop", detail=matched))
+            self._stop_state.pop(req.id, None)
+            return
+        if req.done:                    # stop token / length: flush all
+            while req.emitted < len(gen):
+                i = req.emitted
+                events.append(StreamEvent(req.id, gen[i], i,
+                                          i == len(gen) - 1))
+                req.emitted += 1
+            self._stop_state.pop(req.id, None)
+            return
+        hold = 0
+        for s in sp.stop_strings:
+            for k in range(min(len(s) - 1, len(text)), 0, -1):
+                if text.endswith(s[:k]):
+                    hold = max(hold, k)
+                    break
+        safe_chars = len(text) - hold
+        safe = sum(1 for e in ends if e <= safe_chars)
+        while req.emitted < safe:
+            i = req.emitted
+            events.append(StreamEvent(req.id, gen[i], i, False))
+            req.emitted += 1
 
     # ------------------------------------------------------------------
     # page plumbing
@@ -419,6 +627,14 @@ class EngineCore:
         if not mgr.cow_pending:
             return
         pairs, mgr.cow_pending = mgr.cow_pending, []
+        try:
+            self._fire("cow_copy")
+        except InjectedFault:
+            # debt restored untouched: the caller quarantines the grower
+            # (whose abort cancels exactly the debts that die with it)
+            # and every other pair stays owed for the next _apply_cow
+            mgr.cow_pending = pairs
+            raise
         self.pools = copy_pages(self.pools, [s for s, _ in pairs],
                                 [d for _, d in pairs])
 
@@ -470,11 +686,26 @@ class EngineCore:
     # the step
     # ------------------------------------------------------------------
     def step(self) -> List[StreamEvent]:
-        """Advance the engine one iteration and return the tokens it
+        """Advance the engine one iteration and return the events it
         produced (possibly none: a step may be all prefill, or idle).
-        Event order within a step: first tokens of sequences whose
-        prefill completed, then one decode token per running slot."""
-        events: List[StreamEvent] = []
+        Event order within a step: terminal events queued since the last
+        step (shed requests), deadline expiries, then first tokens of
+        sequences whose prefill completed, then one decode token per
+        running slot.  Per-request failures (injected faults, non-finite
+        logits) quarantine the offending request mid-step -- survivors'
+        tokens are bit-identical to a fault-free run; only an
+        ``EngineError`` (unrecoverable engine-level breach) propagates
+        out."""
+        t0 = time.perf_counter()
+        try:
+            return self._step()
+        finally:
+            self.step_s_high_water = max(self.step_s_high_water,
+                                         time.perf_counter() - t0)
+
+    def _step(self) -> List[StreamEvent]:
+        events: List[StreamEvent] = self._pending_events
+        self._pending_events = []
         sched, mgr, serve = self.sched, self.mgr, self.serve
         if not sched.has_work:
             return events
@@ -482,6 +713,21 @@ class EngineCore:
         ps = mgr.page_size
         self._ensure_pools()
         pre_scan, pre_chunk, decode = self._paged_fns()
+
+        # ---- deadline sweep ------------------------------------------
+        # before admission, so an already-expired waiting request never
+        # takes a slot; expired running requests are quarantined cleanly
+        # (pages freed, stash dropped) with a structured timeout event
+        now = self._clock()
+        expired = [r for r in list(sched.waiting) + list(sched.resuming)
+                   if r.deadline_expired(now)]
+        expired += [r for _, r in sched.running()
+                    if r.deadline_expired(now) and not r.done]
+        for req in expired:
+            self._quarantine(req, RequestTimeout(
+                f"request {req.id}: deadline "
+                f"{req.sampling.deadline_ms:g}ms exceeded",
+                request_id=req.id), events)
 
         for req in sched.retire():
             self.requests.pop(req.id, None)
@@ -496,8 +742,20 @@ class EngineCore:
         for slot, req in admitted:
             if self.pressure.holds(req.id):
                 if req.resume_kind == "swap":
-                    self.pools = self.pressure.restore(self.pools, slot,
-                                                       req)
+                    try:
+                        self.pools = self.pressure.restore(
+                            self.pools, slot, req)
+                    except SwapRestoreFailed:
+                        # H2D failed past its retry budget: downgrade
+                        # the resume to recompute -- unwind the slot,
+                        # drop the stash, requeue.  Strictly slower,
+                        # never a failed request.
+                        self.pressure.drop(req.id)
+                        self.pressure.stats["swap_fail_downgrades"] += 1
+                        req.resume_kind = "recompute"
+                        req.resume_shared_len = 0
+                        sched.preempt(slot)
+                        continue
                 else:
                     self.pressure.drop(req.id)
             if req.state == RUNNING:
@@ -505,11 +763,16 @@ class EngineCore:
         if not admitted and not sched.running():
             if not sched.waiting and not sched.resuming:
                 return events           # everything retired
+            if self.injector is not None:
+                # an injected admission fault can unwind this step's
+                # whole admission -- benign, the queue retries next step
+                return events
             # submit-time validation guarantees the head of either queue
             # fits an empty pool (the watermark is waived when no slot is
-            # occupied); kept as a cheap tripwire
+            # occupied); kept as a tripwire -- reaching it means engine
+            # state is inconsistent, not that one request is bad
             req = (sched.resuming or sched.waiting)[0]
-            raise RuntimeError(
+            raise EngineError(
                 f"pool too small for request {req.id}: needs "
                 f"{-(-req.target_len // ps)} pages, pool has "
                 f"{mgr.num_pages - 1}")
@@ -528,9 +791,19 @@ class EngineCore:
                 if sched.slots[slot] is not req \
                         or req.state != PREFILLING:
                     continue            # preempted again, or swap-resumed
+                try:
+                    # launch-site faults fire BEFORE any page mutation:
+                    # the untouched prefill simply retries next step
+                    self._fire("prefill_launch")
+                except InjectedFault:
+                    continue
                 start = req.prefilled
                 toks = req.prefill_tokens[start:]
-                self._grow(slot, len(toks))
+                try:
+                    self._grow(slot, len(toks))
+                except InjectedFault as e:
+                    self._quarantine(req, e, events)
+                    continue
                 self.pools, last_logits = pre_scan(
                     self.params, jnp.asarray(toks[None]), self.pools,
                     jnp.asarray(mgr.device_row(slot)),
@@ -539,8 +812,7 @@ class EngineCore:
                 if req.generated:
                     self._resume_decode(req, slot)
                 else:
-                    events.append(self._first_token(req, slot,
-                                                    last_logits))
+                    self._first_token(req, slot, last_logits, events)
         else:
             # chunked: fixed-size chunks through the full forward, jobs
             # for distinct sequences batched into one launch, padded to
@@ -550,12 +822,23 @@ class EngineCore:
             width = serve.max_batch
             for group in self._prefill_groups(
                     sched.prefill_schedule(budget, chunk), width):
+                try:
+                    # fires BEFORE the group's page growth; skipping the
+                    # REST of this step's prefill keeps chunk order (a
+                    # slot's chunk k+1 must never launch before chunk k)
+                    self._fire("prefill_launch")
+                except InjectedFault:
+                    break
                 live = []
                 for slot, req, start, n in group:
                     if sched.slots[slot] is not req \
                             or req.state != PREFILLING:
                         continue        # victim of an earlier _grow
-                    self._grow(slot, n)
+                    try:
+                        self._grow(slot, n)
+                    except InjectedFault as e:
+                        self._quarantine(req, e, events)
+                        continue
                     live.append((slot, req, start, n))
                 # _grow may have evicted an earlier group member
                 live = [(s, r, st, n) for s, r, st, n in live
@@ -588,11 +871,17 @@ class EngineCore:
                     if req.generated:   # recompute-resume finished
                         self._resume_decode(req, slot)
                     else:
-                        events.append(self._first_token(
-                            req, slot, last_logits[i:i + 1]))
+                        self._first_token(req, slot,
+                                          last_logits[i:i + 1], events)
 
         # ---- decode phase --------------------------------------------
         cand = [(s, r) for s, r in sched.decoding() if not r.done]
+        try:
+            # fires BEFORE the decode _grows: the whole decode phase is
+            # skipped untouched this step and retries on the next one
+            self._fire("decode_launch")
+        except InjectedFault:
+            cand = []
         # materialise the page (maybe a fresh one) every running
         # sequence's next token will be written to -- evicting other
         # sequences under pressure -- THEN snapshot the table for the
@@ -600,7 +889,10 @@ class EngineCore:
         for slot, req in cand:
             if sched.slots[slot] is not req:
                 continue                # evicted by an earlier _grow
-            self._grow(slot, 1)
+            try:
+                self._grow(slot, 1)
+            except InjectedFault as e:
+                self._quarantine(req, e, events)
         running = [(s, r) for s, r in cand if sched.slots[s] is r]
         if serve.debug_invariants:
             self._check_invariants()
@@ -619,6 +911,11 @@ class EngineCore:
         logits, self.pools = decode(
             self.params, jnp.asarray(self.next_tok), self.pools,
             jnp.asarray(table), jnp.asarray(pos_np))
+        rowok = None
+        if serve.logit_guard == "fail":
+            # one device-side reduction + a max_batch-bool transfer: the
+            # guard never pulls the full logits to host
+            rowok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
         if all(r.sampling.greedy for _, r in running):
             # one batched argmax: the common all-greedy step costs one
             # device op, and matches the pre-core engine bit for bit
@@ -634,10 +931,18 @@ class EngineCore:
             picked = {slot: self._sample(req, logits_np[slot])
                       for slot, req in running}
         for slot, req in running:
+            try:
+                self._fire("sample")
+                if rowok is not None and not rowok[slot]:
+                    raise LogitError(
+                        f"request {req.id}: non-finite logits at token "
+                        f"{len(req.generated)}", request_id=req.id)
+            except (InjectedFault, RequestError) as e:
+                self._quarantine(req, e, events)
+                continue
             tok = picked[slot]
             req.generated.append(tok)
             self.next_tok[slot] = tok
-            events.append(StreamEvent(req.id, tok,
-                                      len(req.generated) - 1, req.done))
+            self._stream(req, events)
         self.events_emitted += len(events)
         return events

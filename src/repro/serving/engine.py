@@ -30,7 +30,7 @@ from repro.config import ModelConfig, ServeConfig
 from repro.core.offload import HostOffloadEngine
 # Re-exported for backward compatibility: these used to be defined here.
 from repro.serving.core import EngineCore, StreamEvent, sample_token  # noqa: F401
-from repro.serving.scheduler import (ABORTED, FINISHED, Request,
+from repro.serving.scheduler import (ABORTED, FAILED, FINISHED, Request,
                                      SamplingParams)  # noqa: F401
 
 
@@ -85,6 +85,12 @@ class ServeEngine:
     cfg: ModelConfig
     serve: ServeConfig = field(default_factory=ServeConfig)
     offload: Optional[HostOffloadEngine] = None
+    # token-ids -> text callable, forwarded to the core; required only
+    # when requests carry SamplingParams.stop_strings
+    detokenize: Optional[object] = None
+    # FaultInjector (serving/faults.py) forwarded to the core; None is
+    # the no-op default
+    injector: Optional[object] = None
     # jitted paged prefill/decode triples keyed by resolved paged impl;
     # the same dict object backs the core, so tests clearing it force a
     # retrace through both
@@ -111,7 +117,9 @@ class ServeEngine:
         if self._core is None:
             self._core = EngineCore(self.model, self.params, self.cfg,
                                     self.serve,
-                                    fn_cache=self._paged_fn_cache)
+                                    fn_cache=self._paged_fn_cache,
+                                    detokenize=self.detokenize,
+                                    injector=self.injector)
         return self._core
 
     # Back-compat observability aliases: benchmarks/tests read these off
@@ -245,7 +253,7 @@ class ServeEngine:
             cleaned = True
             subs.remove(sub)
             for r in submitted:
-                if r.state not in (FINISHED, ABORTED):
+                if r.state not in (FINISHED, ABORTED, FAILED):
                     core.abort(r.id)
 
         def drain():
@@ -253,7 +261,7 @@ class ServeEngine:
                 while True:
                     while buf:          # may refill while we yield
                         yield buf.popleft()
-                    if all(r.state in (FINISHED, ABORTED)
+                    if all(r.state in (FINISHED, ABORTED, FAILED)
                            for r in submitted):
                         break
                     dispatch(core.step())

@@ -50,10 +50,14 @@ class PagedKVCache:
     SCRATCH = 0          # physical page 0: idle-slot write target, never owned
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int, *, injector=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is scratch)")
         self.num_pages = num_pages
+        # optional FaultInjector (serving/faults.py): when armed, the
+        # "page_alloc" site fires in append() BEFORE any mutation, so an
+        # injected allocation fault leaves the cache untouched
+        self.injector = injector
         self.page_size = page_size
         self.max_slots = max_slots
         self.max_pages_per_seq = max_pages_per_seq
@@ -206,6 +210,9 @@ class PagedKVCache:
             raise OutOfPages(
                 f"slot {slot}: need {need + (1 if cow else 0)} pages, "
                 f"{len(self._free)} free")
+        if self.injector is not None and (need or cow):
+            # fires before any mutation: a faulted append is a no-op
+            self.injector.fire("page_alloc")
         if cow:
             old = self._pages[slot][-1]
             new = self._take_free()

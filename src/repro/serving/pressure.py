@@ -29,6 +29,7 @@ steps; the jitted decode/prefill functions never see any of this.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 
 from repro.config import ModelConfig, ServeConfig
 from repro.core.offload import OffloadLatencyModel, preempt_cost_model
+from repro.serving.faults import SwapRestoreFailed
 from repro.serving.paged_cache import OutOfPages, PagedKVCache
 from repro.serving.scheduler import (PREFILLING, ContinuousBatchScheduler,
                                      Request)
@@ -142,6 +144,12 @@ class HostPagePool:
         self.used_pages += n_pages
         self.peak_pages = max(self.peak_pages, self.used_pages)
 
+    def peek(self, request_id: int):
+        """Read a stash without consuming it -- restore() scatters from
+        a peek and only pops after the copy-back succeeded, so a failed
+        swap-in never loses the only copy of the KV."""
+        return self._stash[request_id][0]
+
     def pop(self, request_id: int):
         host_data, n_pages = self._stash.pop(request_id)
         self.used_pages -= n_pages
@@ -162,7 +170,8 @@ class PressureManager:
     def __init__(self, cfg: ModelConfig, serve: ServeConfig,
                  cache: PagedKVCache, sched: ContinuousBatchScheduler, *,
                  latency_model: Optional[OffloadLatencyModel] = None,
-                 swap_latency_s: float = 5e-4, prefix_cache=None):
+                 swap_latency_s: float = 5e-4, prefix_cache=None,
+                 injector=None):
         if serve.preempt_policy not in ("swap", "recompute", "auto"):
             raise ValueError(
                 f"unknown preempt_policy {serve.preempt_policy!r}")
@@ -175,10 +184,39 @@ class PressureManager:
         self.swap_latency_s = swap_latency_s
         self.dtype_bytes = jnp.dtype(cfg.dtype).itemsize
         self.prefix_cache = prefix_cache    # RadixPrefixIndex or None
+        self.injector = injector            # FaultInjector or None
+        self.swap_retries = serve.swap_retries
+        self.swap_retry_backoff_s = serve.swap_retry_backoff_s
         self.stats = {"preemptions": 0, "swaps": 0, "recomputes": 0,
                       "swap_bytes_out": 0, "swap_bytes_in": 0,
                       "cache_evictions": 0, "swap_drops": 0,
-                      "abort_drops": 0}
+                      "abort_drops": 0, "fail_drops": 0,
+                      "swap_retries": 0, "swap_fail_downgrades": 0}
+
+    # -- transient-fault retry --------------------------------------------
+    def _swap_op(self, site: str, fn):
+        """Run a swap DMA op under the transient-fault retry budget:
+        ``swap_retries`` retries with bounded exponential backoff.  The
+        injector site fires BEFORE the op, so an injected fault never
+        leaves a half-done copy.  Returns the op's result, or None when
+        the budget is exhausted -- the caller downgrades to recompute
+        (swap-out) or raises SwapRestoreFailed (swap-in); a swap fault
+        never fails the request itself.  OutOfPages is not a transient
+        fault and passes straight through."""
+        for attempt in range(self.swap_retries + 1):
+            try:
+                if self.injector is not None:
+                    self.injector.fire(site)
+                return fn()
+            except OutOfPages:
+                raise
+            except RuntimeError:            # InjectedFault or real DMA error
+                self.stats["swap_retries"] += 1
+                if attempt < self.swap_retries \
+                        and self.swap_retry_backoff_s > 0:
+                    time.sleep(min(self.swap_retry_backoff_s * 2 ** attempt,
+                                   0.1))
+        return None
 
     # -- policy ----------------------------------------------------------
     def choose_policy(self, n_pages: int, n_tokens: int) -> str:
@@ -242,7 +280,14 @@ class PressureManager:
         if kind == "swap" and not self.host_pool.has_room(n_pages - shared):
             kind = "recompute"
         if kind == "swap":
-            host_data = gather_pages(pools, owned[shared:])
+            host_data = self._swap_op(
+                "swap_d2h", lambda: gather_pages(pools, owned[shared:]))
+            if host_data is None:
+                # D2H kept failing past the retry budget: fall back to
+                # recompute -- strictly slower, never incorrect
+                kind = "recompute"
+                self.stats["swap_fail_downgrades"] += 1
+        if kind == "swap":
             self.host_pool.put(req.id, host_data, n_pages - shared)
             self.stats["swaps"] += 1
             self.stats["swap_bytes_out"] += _nbytes(host_data)
@@ -264,23 +309,34 @@ class PressureManager:
         """Copy a swap-resumed request's stashed KV back into the pages
         admission just materialised for it -- the exclusive suffix only;
         the shared prefix was re-shared straight from the index.
-        Returns new pools."""
-        host_data = self.host_pool.pop(req.id)
+        Returns new pools.  The scatter reads from a ``peek`` of the
+        stash and only pops it once the copy-back succeeded; past the
+        retry budget this raises ``SwapRestoreFailed`` with the stash
+        intact, and the engine downgrades the resume to recompute."""
+        host_data = self.host_pool.peek(req.id)
         ps = self.cache.page_size
         n_pages = -(-req.resume_len // ps)
         k = req.resume_shared_len // ps
         pages = self.cache.owned_pages(slot)[k:n_pages]
         assert len(pages) == n_pages - k, (slot, pages, n_pages, k)
+        new_pools = self._swap_op(
+            "swap_h2d", lambda: scatter_pages(pools, pages, host_data))
+        if new_pools is None:
+            raise SwapRestoreFailed(
+                f"request {req.id}: swap-in failed past "
+                f"{self.swap_retries} retries")
+        self.host_pool.pop(req.id)
         self.stats["swap_bytes_in"] += _nbytes(host_data)
         req.resume_kind = None
         req.resume_shared_len = 0
-        return scatter_pages(pools, pages, host_data)
+        return new_pools
 
     def drop(self, request_id: int, *, reason: str = "downgrade") -> None:
         """Discard a stash: its owner was downgraded to recompute while
         waiting (its shared prefix got evicted, so the exclusive-suffix
-        stash alone no longer reconstructs the sequence), or it was
-        aborted while swap-preempted (``reason="abort"``)."""
+        stash alone no longer reconstructs the sequence), aborted while
+        swap-preempted (``reason="abort"``), or quarantined after a
+        request-level failure (``reason="fail"``)."""
         self.host_pool.pop(request_id)
-        self.stats["abort_drops" if reason == "abort"
-                   else "swap_drops"] += 1
+        self.stats[{"abort": "abort_drops",
+                    "fail": "fail_drops"}.get(reason, "swap_drops")] += 1

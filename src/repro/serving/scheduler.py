@@ -50,11 +50,13 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.faults import InjectedFault, RequestRejected
 from repro.serving.paged_cache import (OutOfPages, PagedKVCache,
                                        pages_needed)
 
-WAITING, PREFILLING, RUNNING, PREEMPTED, FINISHED, ABORTED = (
-    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED", "ABORTED")
+WAITING, PREFILLING, RUNNING, PREEMPTED, FINISHED, ABORTED, FAILED = (
+    "WAITING", "PREFILLING", "RUNNING", "PREEMPTED", "FINISHED", "ABORTED",
+    "FAILED")
 
 
 @dataclass(frozen=True)
@@ -76,6 +78,16 @@ class SamplingParams:
     # generation stops the step after any of these token ids is emitted
     # (the stop token itself is the request's last token, like eos was)
     stop_token_ids: Tuple[int, ...] = ()
+    # generation stops when any of these strings appears in the decoded
+    # text of the generated tokens; the matched suffix is trimmed from
+    # the emitted stream (tokens that could extend into a stop string
+    # are held back until disambiguated).  Requires the engine to have a
+    # ``detokenize`` callable.
+    stop_strings: Tuple[str, ...] = ()
+    # wall-clock deadline relative to submit time, in milliseconds.
+    # Expired waiting requests are shed (structured timeout error);
+    # expired running requests are aborted cleanly.  None = no deadline.
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
@@ -87,11 +99,18 @@ class SamplingParams:
                              f"{self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {self.deadline_ms}")
         # normalise any iterable (set, list, ndarray) to a sorted tuple
         # so params stay hashable and comparisons are order-independent
         object.__setattr__(
             self, "stop_token_ids",
             tuple(sorted({int(t) for t in self.stop_token_ids})))
+        strings = tuple(dict.fromkeys(str(s) for s in self.stop_strings))
+        if any(not s for s in strings):
+            raise ValueError("stop_strings must be non-empty strings")
+        object.__setattr__(self, "stop_strings", strings)
 
     @property
     def greedy(self) -> bool:
@@ -132,6 +151,12 @@ class Request:
     # -- prefix-cache bookkeeping --------------------------------------
     matched_len: int = 0               # cached tokens shared at admission
     resume_shared_len: int = 0         # shared-prefix tokens at swap-preempt
+    # -- fault-tolerance bookkeeping -----------------------------------
+    submit_t: float = 0.0              # engine clock at submit (deadlines)
+    error: Optional[str] = None        # structured detail when FAILED
+    # -- stop-string bookkeeping ---------------------------------------
+    emitted: int = 0                   # generated tokens already streamed
+    stop_matched: bool = False         # a stop string fired (terminal)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -193,11 +218,19 @@ class Request:
 
     @property
     def done(self) -> bool:
+        if self.stop_matched:
+            return True
         if len(self.generated) >= self.max_new_tokens:
             return True
         stop = self.stop_token_ids
         return bool(stop and self.generated
                     and self.generated[-1] in stop)
+
+    def deadline_expired(self, now: float) -> bool:
+        """True when the request carries a deadline and ``now`` (engine
+        clock, same units as ``submit_t``) is past it."""
+        dl = self.sampling.deadline_ms if self.sampling is not None else None
+        return dl is not None and (now - self.submit_t) * 1e3 > dl
 
 
 class ContinuousBatchScheduler:
@@ -232,18 +265,23 @@ class ContinuousBatchScheduler:
 
     # -- queue ----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Validate and enqueue.  A request that can never fit -- its
+        worst case exceeds max_seq_len or the whole pool -- is rejected
+        *here*, with a structured ``RequestRejected`` (a ValueError
+        subclass), instead of poisoning a later ``step()``."""
         if req.state != WAITING:
             raise ValueError(f"request {req.id} already {req.state}")
         worst = pages_needed(0, req.target_len, self.cache.page_size)
         if worst > self.cache.max_pages_per_seq:
-            raise ValueError(
+            raise RequestRejected(
                 f"request {req.id}: target_len {req.target_len} exceeds "
                 f"max_seq_len "
-                f"{self.cache.max_pages_per_seq * self.cache.page_size}")
+                f"{self.cache.max_pages_per_seq * self.cache.page_size}",
+                request_id=req.id)
         if worst > self.cache.num_pages - 1:
-            raise ValueError(
+            raise RequestRejected(
                 f"request {req.id}: needs {worst} pages, pool has "
-                f"{self.cache.num_pages - 1}")
+                f"{self.cache.num_pages - 1}", request_id=req.id)
         req.arrival = self._arrival_seq
         self._arrival_seq += 1
         self.waiting.append(req)
@@ -406,6 +444,15 @@ class ContinuousBatchScheduler:
                 except OutOfPages:
                     self.cache.free(slot)
                     raise
+                except InjectedFault:
+                    # transient allocation fault: unwind this admission
+                    # completely (slot freed, request back at the head of
+                    # the resuming queue, still PREEMPTED with its stash
+                    # intact) and stop admitting this step -- the resume
+                    # simply retries next step
+                    self.cache.free(slot)
+                    self.resuming.appendleft(req)
+                    break
                 req.prefilled = req.resume_len
                 req.state = RUNNING if (req.generated and req.prefill_done) \
                     else PREFILLING

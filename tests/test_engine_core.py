@@ -633,3 +633,162 @@ def test_orphan_event_drops_are_counted(built):
     # reset() starts a fresh buffer and counter
     core.reset()
     assert core.stats()["orphans_dropped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance satellites: structured rejection, abort idempotency,
+# stop strings
+# ---------------------------------------------------------------------------
+
+def test_submit_time_structured_rejection(built):
+    """A request that can never fit is rejected at submission with a
+    structured RequestRejected (a ValueError, so legacy callers keep
+    working) -- never a RuntimeError out of a later step().  The engine
+    stays clean and keeps serving."""
+    from repro.serving.faults import RequestRejected
+    core, cfg = _core(built, num_pages=3)         # 2 usable pages = 32 tok
+    rng = np.random.default_rng(40)
+    sp = SamplingParams(max_new_tokens=6)
+    with pytest.raises(RequestRejected, match="pool has 2") as ei:
+        core.add_request(rng.integers(0, cfg.vocab_size, size=40),
+                         SamplingParams(max_new_tokens=6), request_id=0)
+    assert isinstance(ei.value, ValueError)
+    assert ei.value.code == "rejected" and ei.value.request_id == 0
+    with pytest.raises(RequestRejected, match="max_seq_len"):
+        core.add_request(rng.integers(0, cfg.vocab_size, size=90),
+                         SamplingParams(max_new_tokens=30), request_id=1)
+    assert not core.requests and not core.has_work
+    rid = core.add_request(rng.integers(0, cfg.vocab_size, size=5), sp)
+    assert len(_drain(core)[rid]) == 6            # engine unpoisoned
+
+
+def test_double_abort_has_no_side_effects(built):
+    """Aborting twice (or aborting a finished id) must not double-free
+    pages, double-count aborts, or disturb a co-tenant."""
+    core, cfg = _core(built, num_pages=13)
+    rng = np.random.default_rng(41)
+    sp = SamplingParams(max_new_tokens=6)
+    core.add_request(rng.integers(0, cfg.vocab_size, size=8), sp,
+                     request_id=0)
+    core.add_request(rng.integers(0, cfg.vocab_size, size=8), sp,
+                     request_id=1)
+    survivor = core.requests[1]
+    core.step()
+    assert core.abort(0)
+    free = core.mgr.free_pages
+    for _ in range(3):
+        assert not core.abort(0)                  # idempotent, no effect
+    assert core.mgr.free_pages == free
+    assert core.aborts == 1
+    core.mgr.check_invariants()
+    _drain(core)
+    assert survivor.state == FINISHED and len(survivor.generated) == 6
+    assert not core.abort(1)                      # finished: no-op too
+    assert core.aborts == 1 and core.mgr.used_pages == 0
+
+
+def _detok(tokens):
+    """Deterministic test detokenizer: token t -> "<t>"."""
+    return "".join(f"<{int(t)}>" for t in tokens)
+
+
+def test_stop_strings_trim_and_span_token_boundary(built):
+    """A stop string spanning a token boundary: only tokens wholly
+    before the match are ever emitted (the matcher holds back any text
+    suffix that could still become a match), the matched suffix is
+    trimmed, and the stream ends with a kind="stop" event naming the
+    matched string."""
+    model, params, cfg = built
+    serve = ServeConfig(max_batch=3, max_seq_len=96, page_size=16,
+                        prefill_chunk=16, debug_invariants=True,
+                        num_pages=13)
+    rng = np.random.default_rng(42)
+    prompt = rng.integers(0, cfg.vocab_size, size=7)
+    sp = SamplingParams(max_new_tokens=6)
+
+    plain = EngineCore(model, params, cfg, serve, detokenize=_detok)
+    want = _solo_tokens(plain, prompt, sp)
+    assert len(want) == 6
+    # a stop string crossing the boundary between generated tokens 1 and
+    # 2: the tail of piece 1 plus the head of piece 2
+    pieces = [f"<{t}>" for t in want]
+    stop = pieces[1][-2:] + pieces[2][:2]
+    text = "".join(pieces)
+    match = text.find(stop)
+    ends = np.cumsum([len(p) for p in pieces])
+    exp_emitted = int((ends <= match).sum())
+    assert 0 < exp_emitted < 3                    # genuinely mid-stream
+
+    core = EngineCore(model, params, cfg, serve, detokenize=_detok)
+    core.add_request(prompt, SamplingParams(max_new_tokens=6,
+                                            stop_strings=(stop,)),
+                     request_id=0)
+    req = core.requests[0]
+    events = []
+    while core.has_work:
+        events += core.step()
+    assert req.state == FINISHED and req.stop_matched
+    toks = [e for e in events if e.kind == "token"]
+    stops = [e for e in events if e.kind == "stop"]
+    assert [e.token for e in toks] == want[:exp_emitted]
+    assert not toks or not toks[-1].finished      # stop event terminates
+    assert len(stops) == 1
+    assert stops[0].finished and stops[0].token == -1
+    assert stops[0].detail == stop
+    assert core.mgr.used_pages == 0
+    assert not core._stop_state                   # holdback state freed
+
+
+def test_stop_strings_holdback_then_flush(built):
+    """A stop-string *prefix* at the text tail is held back (never
+    half-emit a potential match) but flushed in order when the request
+    finishes by length instead."""
+    model, params, cfg = built
+    serve = ServeConfig(max_batch=3, max_seq_len=96, page_size=16,
+                        prefill_chunk=16, debug_invariants=True,
+                        num_pages=13)
+    rng = np.random.default_rng(43)
+    prompt = rng.integers(0, cfg.vocab_size, size=5)
+    sp = SamplingParams(max_new_tokens=5)
+    plain = EngineCore(model, params, cfg, serve, detokenize=_detok)
+    want = _solo_tokens(plain, prompt, sp)
+    # piece 2 is a proper prefix of the stop string, which never
+    # completes: token 2 must be held while the request is live
+    stop = f"<{want[2]}>" + "§never"
+
+    core = EngineCore(model, params, cfg, serve, detokenize=_detok)
+    core.add_request(prompt, SamplingParams(max_new_tokens=5,
+                                            stop_strings=(stop,)),
+                     request_id=0)
+    req = core.requests[0]
+    held_seen = False
+    events = []
+    while core.has_work:
+        events += core.step()
+        if len(req.generated) == 3 and not req.done:
+            assert req.emitted == 2, "potential match was half-emitted"
+            held_seen = True
+    assert held_seen
+    toks = [e for e in events if e.kind == "token"]
+    assert [e.token for e in toks] == want        # flushed, bit-identical
+    assert [e.index for e in toks] == list(range(5))
+    assert toks[-1].finished and req.state == FINISHED
+    assert not any(e.kind == "stop" for e in events)
+
+
+def test_stop_strings_require_detokenizer(built):
+    from repro.serving.faults import RequestRejected
+    core, cfg = _core(built, num_pages=13)        # no detokenize=
+    rng = np.random.default_rng(44)
+    with pytest.raises(RequestRejected, match="detokenize"):
+        core.add_request(rng.integers(0, cfg.vocab_size, size=5),
+                         SamplingParams(max_new_tokens=3,
+                                        stop_strings=("x",)))
+    assert not core.has_work
+
+
+def test_stop_strings_validation():
+    sp = SamplingParams(stop_strings=["ab", "ab", "c"])
+    assert sp.stop_strings == ("ab", "c")         # deduped, order kept
+    with pytest.raises(ValueError, match="stop_strings"):
+        SamplingParams(stop_strings=("ok", ""))

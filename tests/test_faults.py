@@ -1,0 +1,618 @@
+"""Fault tolerance: error taxonomy, deterministic injection, chaos soak.
+
+Unit level: ``FaultInjector`` schedules (nth/every/prob/burst/times) are
+deterministic under a fixed seed and reject unknown sites.  System
+level: a no-op injector adds zero overhead sites to a traced step
+(trace-count + bit-identity assertion); injected swap D2H/H2D failures
+retry then downgrade to recompute without failing the request; per-
+request faults (page_alloc, cow_copy, sample, non-finite logits)
+quarantine exactly the offending request while survivors' greedy tokens
+stay bit-identical to a fault-free oracle; deadlines shed waiting and
+abort running requests; the bounded waiting queue rejects or sheds; and
+the chaos soak drives every named site at once across a mixed
+prefill/decode/preemption/prefix-sharing workload with invariants
+checked every step and zero leaked pages/stashes at the end.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import ParallelConfig, ServeConfig, get_model_config, \
+    reduce_for_smoke
+from repro.serving.core import EngineCore
+from repro.serving.faults import (SITES, EngineError, FaultInjector,
+                                  InjectedFault, LogitError, RequestError,
+                                  RequestRejected, RequestTimeout)
+from repro.serving.scheduler import FAILED, FINISHED, RUNNING, SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# unit: the injector itself (the chaos harness must be trustworthy)
+# ---------------------------------------------------------------------------
+
+def test_injector_schedules_fire_exactly_as_specified():
+    inj = FaultInjector(seed=0)
+    inj.arm("page_alloc", nth=(3, 9))
+    inj.arm("swap_d2h", every=4)
+    inj.arm("decode_launch", burst=(5, 2))
+    inj.arm("sample", every=2, times=2)
+
+    def calls(site, n):
+        fired = []
+        for i in range(1, n + 1):
+            try:
+                inj.fire(site)
+            except InjectedFault as e:
+                assert e.site == site and e.call == i
+                fired.append(i)
+        return fired
+
+    assert calls("page_alloc", 12) == [3, 9]
+    assert calls("swap_d2h", 12) == [4, 8, 12]
+    assert calls("decode_launch", 8) == [5, 6]
+    assert calls("sample", 10) == [2, 4]          # times=2 caps total fires
+    assert calls("swap_h2d", 5) == []             # un-armed site never fires
+    assert inj.total_fired == 9
+    assert inj.calls("page_alloc") == 12
+    assert inj.stats()["fired"] == 9
+
+
+def test_injector_probability_deterministic_under_seed():
+    def run(seed):
+        inj = FaultInjector(seed=seed).arm("sample", prob=0.3) \
+            .arm("swap_d2h", prob=0.3)
+        for _ in range(200):
+            for site in ("sample", "swap_d2h"):
+                try:
+                    inj.fire(site)
+                except InjectedFault:
+                    pass
+        return inj.fired_log
+
+    a, b, c = run(7), run(7), run(8)
+    assert a == b, "same seed must replay the same fire pattern"
+    assert len(a) > 0
+    assert a != c, "different seeds should draw different patterns"
+    # distinct sites under one seed draw independent streams
+    assert [n for s, n in a if s == "sample"] != \
+        [n for s, n in a if s == "swap_d2h"]
+
+
+def test_injector_validates_sites_and_schedules():
+    inj = FaultInjector()
+    with pytest.raises(ValueError, match="unknown fault site"):
+        inj.arm("warp_core")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        inj.fire("warp_core")
+    with pytest.raises(ValueError, match="bad schedule"):
+        inj.arm("sample", prob=1.5)
+    with pytest.raises(ValueError, match="burst"):
+        inj.arm("sample", burst=(0, 1))
+    assert set(SITES) == {"page_alloc", "swap_d2h", "swap_h2d", "cow_copy",
+                          "prefill_launch", "decode_launch", "sample"}
+
+
+def test_error_taxonomy_shapes():
+    e = RequestRejected("no room", request_id=4)
+    assert isinstance(e, RequestError) and isinstance(e, ValueError)
+    assert e.detail == "rejected: no room" and e.request_id == 4
+    assert RequestTimeout("late").code == "timeout"
+    assert LogitError("nan").code == "logits"
+    assert issubclass(EngineError, RuntimeError)
+    assert not issubclass(EngineError, RequestError)
+
+
+# ---------------------------------------------------------------------------
+# system fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built():
+    from repro.models import build_model
+    cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _core(built, *, injector=None, detokenize=None, clock=None, **serve_kw):
+    model, params, cfg = built
+    serve_kw.setdefault("max_batch", 3)
+    serve_kw.setdefault("max_seq_len", 96)
+    serve_kw.setdefault("page_size", 16)
+    serve_kw.setdefault("prefill_chunk", 16)
+    serve_kw.setdefault("debug_invariants", True)
+    return EngineCore(model, params, cfg, ServeConfig(**serve_kw),
+                      injector=injector, detokenize=detokenize,
+                      clock=clock), cfg
+
+
+def _collect(events, toks, errs):
+    for ev in events:
+        if ev.kind == "token":
+            toks.setdefault(ev.request_id, []).append(ev.token)
+        elif ev.kind == "error":
+            errs.append(ev)
+
+
+def _drain(core, toks=None, errs=None, max_steps=2000):
+    """step() until idle; returns (token events by id, error events).
+    Pass toks/errs to continue accumulating over earlier manual steps."""
+    toks = {} if toks is None else toks
+    errs = [] if errs is None else errs
+    steps = 0
+    while core.has_work:
+        steps += 1
+        assert steps <= max_steps, "engine failed to drain"
+        _collect(core.step(), toks, errs)
+    return toks, errs
+
+
+def _oracle(built, specs, **serve_kw):
+    """Fault-free greedy tokens per request id for the given specs
+    (id -> prompt): greedy decode is batch-composition invariant, so
+    this oracle is valid whatever faults reshuffle the chaos batch."""
+    core, _ = _core(built, **serve_kw)
+    for rid, (prompt, n) in specs.items():
+        core.add_request(prompt, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(core)
+    assert not errs
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# system: zero-overhead / trace-neutral no-op injector
+# ---------------------------------------------------------------------------
+
+def test_noop_injector_is_trace_neutral_and_bit_identical(built):
+    _, _, cfg = built
+    rng = np.random.default_rng(20)
+    specs = {i: (rng.integers(0, cfg.vocab_size, size=s), 5)
+             for i, s in enumerate((5, 40, 9))}
+
+    bare, _ = _core(built, num_pages=13)
+    for rid, (p, n) in specs.items():
+        bare.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    plain, plain_errs = _drain(bare)
+    assert not plain_errs
+
+    inj = FaultInjector(seed=0)                   # constructed, never armed
+    wired, _ = _core(built, injector=inj, num_pages=13)
+    for rid, (p, n) in specs.items():
+        wired.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(wired)
+    assert toks == plain and not errs
+    # the unarmed injector saw every host-side site but traced nothing
+    # extra: launch counts and trace counts match the injector-less run
+    assert wired.prefill_trace_count == bare.prefill_trace_count
+    assert wired.prefill_launches == bare.prefill_launches
+    assert wired.steps == bare.steps
+    assert inj.total_fired == 0
+    for site in ("page_alloc", "prefill_launch", "decode_launch", "sample"):
+        assert inj.calls(site) > 0, f"site {site} never threaded"
+
+
+# ---------------------------------------------------------------------------
+# system: swap fault retry + downgrade (never fails the request)
+# ---------------------------------------------------------------------------
+
+def _pressure_specs(cfg, rng):
+    return {0: (rng.integers(0, cfg.vocab_size, size=8), 60),
+            1: (rng.integers(0, cfg.vocab_size, size=8), 60)}
+
+
+def test_swap_d2h_fault_downgrades_to_recompute(built):
+    """Every swap-out DMA fails: after the retry budget the victim is
+    preempted by recompute instead -- zero failed requests, tokens
+    bit-identical to the fault-free run."""
+    _, _, cfg = built
+    rng = np.random.default_rng(21)
+    specs = _pressure_specs(cfg, rng)
+    kw = dict(num_pages=7, preempt_policy="swap", max_batch=2)
+    want = _oracle(built, specs, **kw)
+
+    inj = FaultInjector(seed=1).arm("swap_d2h", every=1)
+    core, _ = _core(built, injector=inj, **kw)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(core)
+    st = core.pressure.stats
+    assert st["preemptions"] > 0 and st["swaps"] == 0
+    assert st["swap_fail_downgrades"] > 0
+    # each downgrade burned the full retry budget (swap_retries+1 tries)
+    assert st["swap_retries"] == \
+        st["swap_fail_downgrades"] * (core.serve.swap_retries + 1)
+    assert not errs and core.stats()["health"]["failed"] == 0
+    assert toks == want
+    assert core.mgr.used_pages == 0
+    assert len(core.pressure.host_pool) == 0
+
+
+def test_swap_h2d_fault_downgrades_restore_to_recompute(built):
+    """Mid-step swap-in failure: the stash survives the failed scatter
+    (peek-then-pop), the resume unwinds and downgrades to recompute
+    after the retry budget -- request never fails, tokens identical."""
+    _, _, cfg = built
+    rng = np.random.default_rng(22)
+    specs = _pressure_specs(cfg, rng)
+    kw = dict(num_pages=7, preempt_policy="swap", max_batch=2)
+    want = _oracle(built, specs, **kw)
+
+    inj = FaultInjector(seed=2).arm("swap_h2d", every=1)
+    core, _ = _core(built, injector=inj, **kw)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(core)
+    st = core.pressure.stats
+    assert st["swaps"] > 0, "no swap-out: the h2d site was never reached"
+    assert st["swap_fail_downgrades"] > 0 and st["swap_drops"] > 0
+    assert st["swap_retries"] >= core.serve.swap_retries + 1
+    assert not errs and core.stats()["health"]["failed"] == 0
+    assert toks == want
+    assert core.mgr.used_pages == 0
+    assert len(core.pressure.host_pool) == 0, "stash leaked or lost"
+
+
+def test_transient_swap_fault_retries_through(built):
+    """A fault budget smaller than the retry budget: the nth-call D2H
+    faults are absorbed by retries, swaps still happen, nothing is
+    downgraded or failed."""
+    _, _, cfg = built
+    rng = np.random.default_rng(23)
+    specs = _pressure_specs(cfg, rng)
+    kw = dict(num_pages=7, preempt_policy="swap", max_batch=2)
+    want = _oracle(built, specs, **kw)
+
+    inj = FaultInjector(seed=3).arm("swap_d2h", nth=(1,))
+    core, _ = _core(built, injector=inj, **kw)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(core)
+    st = core.pressure.stats
+    assert st["swap_retries"] == 1 and st["swap_fail_downgrades"] == 0
+    assert st["swaps"] > 0
+    assert not errs and toks == want
+
+
+# ---------------------------------------------------------------------------
+# system: per-request quarantine (isolation)
+# ---------------------------------------------------------------------------
+
+def test_sample_fault_quarantines_one_request_only(built):
+    """An injected sampling fault fails exactly the request being
+    sampled; the co-tenant's greedy tokens are bit-identical to its solo
+    run and no pages or stashes leak."""
+    _, _, cfg = built
+    rng = np.random.default_rng(24)
+    specs = {0: (rng.integers(0, cfg.vocab_size, size=5), 6),
+             1: (rng.integers(0, cfg.vocab_size, size=9), 6)}
+    want = _oracle(built, specs, num_pages=13)
+
+    inj = FaultInjector(seed=4).arm("sample", nth=(1,))
+    core, _ = _core(built, injector=inj, num_pages=13)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    r0, r1 = core.requests[0], core.requests[1]
+    toks, errs = _drain(core)
+    # the first sample call belongs to request 0 (first admitted slot)
+    assert r0.state == FAILED and r0.error.startswith("injected")
+    assert len(errs) == 1 and errs[0].request_id == 0
+    assert errs[0].finished and errs[0].kind == "error"
+    assert 0 not in toks
+    assert r1.state == FINISHED and toks[1] == want[1]
+    st = core.stats()
+    assert st["health"]["failed"] == 1
+    assert st["health"]["last_error"].startswith("request 0")
+    assert core.mgr.used_pages == 0
+    core.mgr.check_invariants()
+
+
+def test_page_alloc_fault_quarantines_grower(built):
+    """page_alloc fires pre-mutation inside append: the growing request
+    is quarantined with its pages freed; the survivor is untouched."""
+    _, _, cfg = built
+    rng = np.random.default_rng(25)
+    specs = {0: (rng.integers(0, cfg.vocab_size, size=20), 8),
+             1: (rng.integers(0, cfg.vocab_size, size=9), 8)}
+    want = _oracle(built, specs, num_pages=13)
+
+    inj = FaultInjector(seed=5).arm("page_alloc", nth=(2,))
+    core, _ = _core(built, injector=inj, num_pages=13)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(core)
+    assert len(errs) == 1
+    failed = errs[0].request_id
+    survivor = 1 - failed
+    assert toks[survivor] == want[survivor]
+    assert core.stats()["health"]["failed"] == 1
+    assert core.mgr.used_pages == 0
+    core.mgr.check_invariants()
+
+
+def test_launch_faults_only_delay_never_fail(built):
+    """prefill_launch / decode_launch faults fire before any page
+    mutation: the work simply retries next step -- more steps, same
+    tokens, zero failures."""
+    _, _, cfg = built
+    rng = np.random.default_rng(26)
+    specs = {i: (rng.integers(0, cfg.vocab_size, size=s), 6)
+             for i, s in enumerate((5, 40, 9))}
+    want = _oracle(built, specs, num_pages=13)
+    base, _ = _core(built, num_pages=13)
+    for rid, (p, n) in specs.items():
+        base.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    _drain(base)
+
+    inj = FaultInjector(seed=6).arm("prefill_launch", every=3) \
+        .arm("decode_launch", every=4)
+    core, _ = _core(built, injector=inj, num_pages=13)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    toks, errs = _drain(core)
+    assert not errs and toks == want
+    assert core.stats()["health"]["failed"] == 0
+    assert inj.total_fired > 0
+    assert core.steps > base.steps, "skipped launches must cost steps"
+
+
+def _poison_slot0_decode(core):
+    """Wrap the core's cached fused decode fn so slot 0's logits row is
+    always NaN -- a per-slot numerical blow-up, without touching any
+    other slot's row.  (Poisoning an embedding row would NOT do: the
+    smoke model ties embeddings, so a NaN embed row NaNs one logit
+    *column* for every co-batched request.)"""
+    import jax.numpy as jnp
+    pre_scan, pre_chunk, dec = core._paged_fns()
+
+    def poisoned_dec(params, tok, pools, table, pos):
+        logits, pools = dec(params, tok, pools, table, pos)
+        return logits.at[0].set(jnp.nan), pools
+
+    core._paged_fn_cache[(core._paged_impl(), core.tp_plan)] = (
+        pre_scan, pre_chunk, poisoned_dec)
+
+
+def test_logit_guard_fails_only_the_nan_request(built):
+    """A numerical blow-up confined to one slot's logits row: under
+    logit_guard="fail" only that request fails (structured "logits"
+    error); the clean co-tenant matches its oracle.  Under "ignore" the
+    NaN request survives (garbage tokens, contained)."""
+    _, _, cfg = built
+    rng = np.random.default_rng(27)
+    specs = {0: (rng.integers(0, cfg.vocab_size, size=5), 5),
+             1: (rng.integers(0, cfg.vocab_size, size=7), 5)}
+    want = _oracle(built, specs, num_pages=13)
+
+    core, _ = _core(built, num_pages=13)
+    _poison_slot0_decode(core)
+    for rid, (p, n) in specs.items():
+        core.add_request(p, SamplingParams(max_new_tokens=n),
+                         request_id=rid)
+    r0 = core.requests[0]
+    toks, errs = _drain(core)
+    # request 0 (slot 0) got its clean prefill-sampled first token, then
+    # died on its first NaN decode row; request 1 never noticed
+    assert r0.state == FAILED and "logits" in r0.error
+    assert len(errs) == 1 and errs[0].request_id == 0
+    assert errs[0].detail.startswith("logits")
+    assert toks[0] == want[0][:1]
+    assert toks[1] == want[1]
+    assert core.stats()["health"]["failed"] == 1
+    assert core.mgr.used_pages == 0
+    core.mgr.check_invariants()
+
+    ignore, _ = _core(built, num_pages=13, logit_guard="ignore")
+    _poison_slot0_decode(ignore)
+    for rid, (p, n) in specs.items():
+        ignore.add_request(p, SamplingParams(max_new_tokens=n),
+                           request_id=rid)
+    toks, errs = _drain(ignore)
+    assert not errs and len(toks[0]) == 5
+    assert toks[1] == want[1]
+
+
+# ---------------------------------------------------------------------------
+# system: deadlines & load shedding
+# ---------------------------------------------------------------------------
+
+def test_deadline_sheds_waiting_request(built):
+    _, _, cfg = built
+    rng = np.random.default_rng(28)
+    clk = [0.0]
+    core, _ = _core(built, clock=lambda: clk[0], max_batch=1)
+    core.add_request(rng.integers(0, cfg.vocab_size, size=6),
+                     SamplingParams(max_new_tokens=8), request_id=0)
+    core.add_request(rng.integers(0, cfg.vocab_size, size=6),
+                     SamplingParams(max_new_tokens=8, deadline_ms=50.0),
+                     request_id=1)
+    toks, errs = {}, []
+    _collect(core.step(), toks, errs)             # 0 admitted, 1 waits
+    clk[0] += 1.0                                 # 1000ms >> 50ms
+    late = core.requests[1]
+    _drain(core, toks, errs)
+    assert late.state == FAILED and late.error.startswith("timeout")
+    assert len(errs) == 1 and errs[0].request_id == 1
+    assert len(toks[0]) == 8                      # no-deadline req unharmed
+    assert core.stats()["health"]["timed_out"] == 1
+    assert core.mgr.used_pages == 0
+
+
+def test_deadline_aborts_running_request_cleanly(built):
+    _, _, cfg = built
+    rng = np.random.default_rng(29)
+    clk = [0.0]
+    core, _ = _core(built, clock=lambda: clk[0])
+    core.add_request(rng.integers(0, cfg.vocab_size, size=6),
+                     SamplingParams(max_new_tokens=40, deadline_ms=100.0),
+                     request_id=0)
+    core.add_request(rng.integers(0, cfg.vocab_size, size=6),
+                     SamplingParams(max_new_tokens=6), request_id=1)
+    toks, errs = {}, []
+    while core.requests[0].state != RUNNING:
+        _collect(core.step(), toks, errs)
+    _collect(core.step(), toks, errs)             # a decode token or two
+    assert core.requests[0].generated, "request 0 never decoded"
+    clk[0] += 1.0
+    doomed = core.requests[0]
+    _drain(core, toks, errs)
+    assert doomed.state == FAILED and doomed.error.startswith("timeout")
+    assert [e.request_id for e in errs] == [0]
+    assert len(toks[1]) == 6
+    assert core.stats()["health"]["timed_out"] == 1
+    assert core.mgr.used_pages == 0
+    core.mgr.check_invariants()
+
+
+def test_deadline_ms_validation():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        SamplingParams(deadline_ms=0.0)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        SamplingParams(deadline_ms=-5.0)
+
+
+def test_bounded_queue_reject_policy(built):
+    _, _, cfg = built
+    rng = np.random.default_rng(30)
+    core, _ = _core(built, max_waiting=1, queue_policy="reject")
+    core.add_request(rng.integers(0, cfg.vocab_size, size=5),
+                     SamplingParams(max_new_tokens=3), request_id=0)
+    with pytest.raises(RequestRejected, match="queue full"):
+        core.add_request(rng.integers(0, cfg.vocab_size, size=5),
+                         SamplingParams(max_new_tokens=3), request_id=1)
+    assert 1 not in core.requests
+    toks, errs = _drain(core)
+    assert not errs and len(toks[0]) == 3
+
+
+def test_bounded_queue_shed_oldest_policy(built):
+    _, _, cfg = built
+    rng = np.random.default_rng(31)
+    core, _ = _core(built, max_waiting=1, queue_policy="shed_oldest")
+    core.add_request(rng.integers(0, cfg.vocab_size, size=5),
+                     SamplingParams(max_new_tokens=3), request_id=0)
+    old = core.requests[0]
+    core.add_request(rng.integers(0, cfg.vocab_size, size=5),
+                     SamplingParams(max_new_tokens=3), request_id=1)
+    assert old.state == FAILED and old.error.startswith("rejected")
+    assert core.stats()["health"]["shed"] == 1
+    toks, errs = _drain(core)
+    # the shed victim's structured error event surfaces on the next step
+    assert [e.request_id for e in errs] == [0]
+    assert 0 not in toks and len(toks[1]) == 3
+
+
+# ---------------------------------------------------------------------------
+# system: the chaos soak (the acceptance scenario)
+# ---------------------------------------------------------------------------
+
+def test_chaos_soak_all_sites(built):
+    """Seeded random injection at every named site over a mixed
+    prefill/decode/preemption/prefix-sharing workload with mid-flight
+    arrivals and an abort: invariants (refcount balance, no leaks, no
+    orphaned stashes, no stale COW debt) hold every step, and every
+    surviving request's greedy tokens are bit-identical to the
+    fault-free oracle."""
+    _, _, cfg = built
+    rng = np.random.default_rng(32)
+    shared = rng.integers(0, cfg.vocab_size, size=32)   # 2 shared pages
+
+    def prompt(extra):
+        return np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, size=extra)])
+
+    specs = {0: (prompt(5), 8), 1: (prompt(9), 8),
+             2: (rng.integers(0, cfg.vocab_size, size=40), 8),
+             3: (prompt(3), 10), 4: (rng.integers(0, cfg.vocab_size,
+                                                  size=7), 10),
+             5: (prompt(6), 6), 6: (rng.integers(0, cfg.vocab_size,
+                                                 size=12), 6)}
+    kw = dict(num_pages=15, preempt_policy="swap", max_batch=3,
+              prefix_cache=True)
+    want = _oracle(built, specs, **kw)
+
+    inj = FaultInjector(seed=1234)
+    for site in SITES:
+        inj.arm(site, prob=0.05)
+    core, _ = _core(built, injector=inj, **kw)
+    late = {3, 4, 5, 6}
+    for rid in sorted(set(specs) - late):
+        core.add_request(specs[rid][0],
+                         SamplingParams(max_new_tokens=specs[rid][1]),
+                         request_id=rid)
+    toks, errs = {}, []
+    steps = 0
+    aborted_mid = False
+    while core.has_work:
+        steps += 1
+        assert steps <= 3000, "chaos soak failed to drain"
+        if steps == 3:
+            for rid in sorted(late):
+                core.add_request(specs[rid][0], SamplingParams(
+                    max_new_tokens=specs[rid][1]), request_id=rid)
+        if steps == 6 and 6 in core.requests and not aborted_mid:
+            aborted_mid = core.abort(6)           # client disconnect
+        for ev in core.step():
+            if ev.kind == "token":
+                toks.setdefault(ev.request_id, []).append(ev.token)
+            elif ev.kind == "error":
+                errs.append(ev)
+        # the invariant gauntlet, every single step
+        core.mgr.check_invariants(extern_refs=core.prefix.page_refs())
+        assert core.pressure.host_pool.used_pages >= 0
+    assert inj.total_fired > 0, "chaos run injected nothing"
+
+    # terminal bookkeeping: no leaks anywhere
+    assert core.mgr.used_pages == core.prefix.cached_pages
+    assert len(core.pressure.host_pool) == 0, "orphaned swap stash"
+    assert not core.mgr.cow_pending, "stale COW debt"
+    core.mgr.check_invariants(extern_refs=core.prefix.page_refs())
+
+    # every request reached exactly one terminal state, and survivors
+    # are bit-identical to the fault-free oracle
+    finished = {r.id for r in core.sched.finished}
+    failed = {e.request_id for e in errs}
+    health = core.stats()["health"]
+    assert health["failed"] + health["shed"] + health["timed_out"] == \
+        len(failed)
+    for rid in specs:
+        if rid in finished:
+            assert toks[rid] == want[rid], f"survivor {rid} diverged"
+        else:
+            assert rid in failed or (aborted_mid and rid == 6)
+    assert finished, "no request survived the soak (probs too hot)"
+
+    # deterministic: replaying the same seed reproduces the same run
+    inj2 = FaultInjector(seed=1234)
+    for site in SITES:
+        inj2.arm(site, prob=0.05)
+    core2, _ = _core(built, injector=inj2, **kw)
+    for rid in sorted(set(specs) - late):
+        core2.add_request(specs[rid][0], SamplingParams(
+            max_new_tokens=specs[rid][1]), request_id=rid)
+    toks2 = {}
+    steps2 = 0
+    while core2.has_work:
+        steps2 += 1
+        assert steps2 <= 3000
+        if steps2 == 3:
+            for rid in sorted(late):
+                core2.add_request(specs[rid][0], SamplingParams(
+                    max_new_tokens=specs[rid][1]), request_id=rid)
+        if steps2 == 6 and 6 in core2.requests:
+            core2.abort(6)
+        for ev in core2.step():
+            if ev.kind == "token":
+                toks2.setdefault(ev.request_id, []).append(ev.token)
+    assert inj2.fired_log == inj.fired_log
+    assert toks2 == toks
