@@ -327,6 +327,19 @@ class ServeConfig:
     # min(base * 2**k, 0.1).  0 disables sleeping (tests).
     swap_retry_backoff_s: float = 0.0
 
+    # --- telemetry (serving/metrics.py) ---------------------------------
+    # Master switch for the engine telemetry subsystem: per-step phase
+    # timings, per-request lifecycle spans (TTFT/TPOT/queue-delay
+    # histograms) and the step flight recorder.  The registry itself
+    # (counters backing ``stats()``) always runs -- it is a handful of
+    # integer adds per step; this gates the clock reads.  All telemetry
+    # is host-side only and can never change jit trace counts.
+    metrics: bool = True
+    # Ring-buffer depth of the step flight recorder: how many recent
+    # step records survive for an ``EngineError``/quarantine postmortem
+    # dump (and the Chrome trace_event export).
+    flight_recorder_steps: int = 64
+
     # --- tensor parallelism (sharding/tp.py) ----------------------------
     # Device count to shard attention + KV page pools over.  Factored as
     # gcd(tp, num_kv_heads) kv-head groups x within-page row sub-shards

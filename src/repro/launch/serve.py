@@ -81,13 +81,40 @@ def _run_stream(model, params, cfg, args) -> None:
           f"{s['pages_peak']}/{core.mgr.usable_pages} pages "
           f"({s['peak_utilization']:.0%}), "
           f"{s['pressure']['preemptions']} preemptions")
-    h = s["health"]
-    print(f"health: {h['failed']} failed, {h['shed']} shed, "
-          f"{h['timed_out']} timed out, {h['swap_retries']} swap retries "
-          f"({h['swap_fail_downgrades']} downgraded to recompute), "
-          f"slowest step {h['step_s_high_water'] * 1e3:.1f}ms"
-          + (f", last error: {h['last_error']}" if h["last_error"]
-             else ""))
+    # health printout sourced from the registry snapshot (the same
+    # numbers stats()["health"] mirrors -- counters read their windows)
+    snap = core.metrics.snapshot()
+
+    def _w(name):
+        m = snap.get(name)
+        return m["window"] if m else 0
+
+    hw = snap.get("engine_step_seconds", {}).get("max", 0.0)
+    print(f"health: {_w('engine_requests_failed_total')} failed, "
+          f"{_w('engine_requests_shed_total')} shed, "
+          f"{_w('engine_requests_timed_out_total')} timed out, "
+          f"{_w('pressure_swap_retries_total')} swap retries "
+          f"({_w('pressure_swap_fail_downgrades_total')} downgraded to "
+          f"recompute), slowest step {hw * 1e3:.1f}ms"
+          + (f", last error: {s['health']['last_error']}"
+             if s["health"]["last_error"] else ""))
+    if core.tracer is not None and core.tracer.completed:
+        ttfts = sorted(r["first_token_t"] - r["submit_t"]
+                       for r in core.tracer.completed
+                       if r["first_token_t"] is not None)
+        if ttfts:
+            print(f"engine-native TTFT: p50 "
+                  f"{ttfts[len(ttfts) // 2] * 1e3:.1f}ms, max "
+                  f"{ttfts[-1] * 1e3:.1f}ms over {len(ttfts)} requests")
+    if args.metrics is not None:
+        print("---- prometheus " + "-" * 48)
+        print(core.export_prometheus(), end="")
+        if args.metrics != "-":
+            import json
+            with open(args.metrics, "w") as f:
+                json.dump(core.chrome_trace(), f)
+            print(f"---- chrome trace ({len(core.flight.records)} steps) "
+                  f"written to {args.metrics}")
 
 
 def main(argv=None):
@@ -113,6 +140,12 @@ def main(argv=None):
                     choices=["reject", "shed_oldest"],
                     help="full-queue policy: reject new arrivals or "
                          "shed the oldest waiting request")
+    ap.add_argument("--metrics", nargs="?", const="-", default=None,
+                    metavar="TRACE_JSON",
+                    help="with --stream: print the Prometheus text "
+                         "exposition at end of run; with a path, also "
+                         "write the flight recorder's Chrome trace_event "
+                         "JSON there (load in chrome://tracing)")
     args = ap.parse_args(argv)
 
     cfg = get_model_config(args.arch)

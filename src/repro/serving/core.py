@@ -49,6 +49,8 @@ from repro.core.fastattention import default_paged_impl
 from repro.serving.faults import (EngineError, InjectedFault, LogitError,
                                   RequestError, RequestRejected,
                                   RequestTimeout, SwapRestoreFailed)
+from repro.serving.metrics import (FlightRecorder, LifecycleTracer,
+                                   MetricsRegistry)
 from repro.serving.paged_cache import OutOfPages, PagedKVCache
 from repro.serving.prefix_cache import RadixPrefixIndex
 from repro.serving.pressure import PressureManager, copy_pages
@@ -117,7 +119,7 @@ class EngineCore:
     def __init__(self, model, params, cfg: ModelConfig,
                  serve: Optional[ServeConfig] = None, *,
                  fn_cache: Optional[dict] = None, injector=None,
-                 detokenize=None, clock=None):
+                 detokenize=None, clock=None, metrics=None):
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -133,9 +135,52 @@ class EngineCore:
         self.injector = injector
         # token ids -> text, required only by SamplingParams.stop_strings
         self.detokenize = detokenize
-        # engine clock for deadlines (seconds, monotonic); injectable so
-        # deadline tests are deterministic
+        # engine clock (seconds, monotonic) for deadlines AND all engine
+        # timing (step watchdog, spans, phase breakdown); injectable so
+        # fake-clock tests observe every timing path deterministically
         self._clock = clock or time.monotonic
+        # -- telemetry (serving/metrics.py) ----------------------------
+        # The registry is always live: its counters back the ``stats()``
+        # view (a handful of integer adds per step).  The lifecycle
+        # tracer, per-step phase breakdown and flight recorder gate on
+        # ``serve.metrics`` -- they are the clock-read overhead.  All of
+        # it is host-side between launches: trace-neutral by
+        # construction, asserted in tests/test_metrics.py.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_steps = m.counter("engine_steps_total",
+                                  help="engine step() iterations")
+        self._c_events = m.counter("engine_events_total",
+                                   help="stream events emitted")
+        self._c_aborts = m.counter("engine_requests_aborted_total",
+                                   help="caller aborts")
+        self._c_failed = m.counter("engine_requests_failed_total",
+                                   help="requests quarantined "
+                                        "(internal/logits/injected)")
+        self._c_shed = m.counter("engine_requests_shed_total",
+                                 help="requests shed from the bounded "
+                                      "waiting queue")
+        self._c_timeout = m.counter("engine_requests_timed_out_total",
+                                    help="deadline_ms expiries")
+        self._h_step = m.histogram("engine_step_seconds",
+                                   help="step() wall-clock on the "
+                                        "engine clock")
+        self._g_pages = m.gauge("kv_pages_used",
+                                help="physical KV pages in use")
+        self._g_pages_hw = m.gauge("kv_pages_peak", high_water=True,
+                                   help="peak KV pages in use "
+                                        "(current window)")
+        self.tracer = (LifecycleTracer(m, self._clock)
+                       if self.serve.metrics else None)
+        self.flight = (FlightRecorder(self.serve.flight_recorder_steps)
+                       if self.serve.metrics else None)
+        # most recent flight-recorder dump: taken when an EngineError
+        # propagates out of step() or a request is quarantined, so the
+        # postmortem survives on the core even if the caller only sees
+        # the exception (which also carries it as ``.flight``)
+        self.last_flight_dump: Optional[List[dict]] = None
+        self._step_rec: Optional[dict] = None
+        self._dump_pending = False
         # tensor parallelism (sharding/tp.py): factor serve.tp into
         # kv-head groups x page-row sub-shards and bind a 2-D mesh; the
         # paged forward fns trace under tp_context, flipping the
@@ -174,22 +219,31 @@ class EngineCore:
     # ------------------------------------------------------------------
     def reset(self) -> None:
         """Drop every request, page, stash and cached prefix and rebuild
-        the serving state from ``self.serve``.  Jit caches and trace
-        counters survive (they are keyed by shapes, not state)."""
+        the serving state from ``self.serve``.  Jit caches, trace
+        counters and the metrics registry survive (they are keyed by the
+        engine's lifetime, not its state) -- use
+        ``reset_metrics_window()`` to open a fresh measurement window."""
         serve = self.serve
         self.mgr = PagedKVCache(serve.pool_pages(), serve.page_size,
                                 serve.max_batch, serve.max_pages_per_seq,
-                                injector=self.injector)
+                                injector=self.injector,
+                                metrics=self.metrics)
         self.prefix = (RadixPrefixIndex(self.mgr, serve.page_size,
-                                        serve.prefix_cache_pages)
+                                        serve.prefix_cache_pages,
+                                        metrics=self.metrics)
                        if serve.prefix_cache else None)
         self.sched = ContinuousBatchScheduler(
             self.mgr, serve.max_batch, admission=serve.admission,
-            watermark_pages=serve.watermark, prefix_cache=self.prefix)
+            watermark_pages=serve.watermark, prefix_cache=self.prefix,
+            tracer=self.tracer)
         self.pressure = PressureManager(self.cfg, serve, self.mgr,
                                         self.sched,
                                         prefix_cache=self.prefix,
-                                        injector=self.injector)
+                                        injector=self.injector,
+                                        metrics=self.metrics,
+                                        tracer=self.tracer)
+        if self.tracer is not None:
+            self.tracer.reset()        # every request is gone with the state
         self.pools = None              # device pools, materialised lazily
         self.next_tok = np.zeros((serve.max_batch,), np.int32)
         self.requests: Dict[int, Request] = {}     # live (unfinished) only
@@ -198,9 +252,6 @@ class EngineCore:
         # to exactly one caller, so mixed-mode users recover them here
         # (drops past the bound are counted, see stats()["orphans_dropped"])
         self.orphan_events: _CountingDeque = _CountingDeque(maxlen=4096)
-        self.steps = 0
-        self.events_emitted = 0
-        self.aborts = 0
         # -- fault-tolerance state -------------------------------------
         # terminal error events produced outside a step() (queue
         # shedding at submit time): the next step() returns them first
@@ -209,11 +260,68 @@ class EngineCore:
         # id -> {"text": decoded generation, "ends": char offset at the
         # end of each generated token}
         self._stop_state: Dict[int, dict] = {}
-        self.failed_count = 0          # quarantined (internal/logits/...)
-        self.shed_count = 0            # load-shed from the bounded queue
-        self.timed_out_count = 0       # deadline_ms expiries
         self.last_error: Optional[str] = None
-        self.step_s_high_water = 0.0   # slowest step() wall-clock ever
+
+    # ------------------------------------------------------------------
+    # registry-backed counters
+    # ------------------------------------------------------------------
+    # stats() is a *view* over the metrics registry: each attribute the
+    # pre-telemetry engine kept as a plain int is now a read-only
+    # property over the registry's current window.  Cumulative Prometheus
+    # totals survive reset(); reset_metrics_window() is what opens a
+    # fresh measurement window (bench warmups call it).
+    @property
+    def steps(self) -> int:
+        return self._c_steps.window
+
+    @property
+    def events_emitted(self) -> int:
+        return self._c_events.window
+
+    @property
+    def aborts(self) -> int:
+        return self._c_aborts.window
+
+    @property
+    def failed_count(self) -> int:
+        return self._c_failed.window
+
+    @property
+    def shed_count(self) -> int:
+        return self._c_shed.window
+
+    @property
+    def timed_out_count(self) -> int:
+        return self._c_timeout.window
+
+    @property
+    def step_s_high_water(self) -> float:
+        return self._h_step.window_max
+
+    def reset_metrics_window(self) -> None:
+        """Open a fresh measurement window: zero every windowed counter,
+        histogram and high-water gauge in the registry (cumulative
+        Prometheus ``_total`` values are untouched), clear the tracer's
+        completed-request log and the flight recorder's ring.  Bench
+        warmups call this so the timed region starts from zero."""
+        self.metrics.reset_window()
+        if self.tracer is not None:
+            self.tracer.clear_completed()
+        if self.flight is not None:
+            self.flight.records.clear()
+        self.mgr.reset_peak()
+
+    def export_prometheus(self) -> str:
+        """Prometheus text-format (0.0.4) exposition of the registry."""
+        return self.metrics.to_prometheus()
+
+    def chrome_trace(self, records: Optional[List[dict]] = None) -> dict:
+        """Chrome ``trace_event`` JSON for the flight recorder's current
+        ring (or a prior ``dump()``): load the result into
+        chrome://tracing or Perfetto for a step/phase timeline."""
+        if self.flight is None:
+            return {"traceEvents": [], "displayTimeUnit": "ms"}
+        return self.flight.to_chrome_trace(records)
 
     @property
     def has_work(self) -> bool:
@@ -321,6 +429,8 @@ class EngineCore:
         req.submit_t = self._clock()
         self.sched.submit(req)          # validates against the pool
         self.requests[req.id] = req
+        if self.tracer is not None:
+            self.tracer.on_submit(req)
         return req
 
     def add_request(self, prompt, sampling: Optional[SamplingParams] = None,
@@ -363,7 +473,9 @@ class EngineCore:
             self.pressure.drop(request_id, reason="abort")
         self.requests.pop(request_id, None)
         self._stop_state.pop(request_id, None)
-        self.aborts += 1
+        self._c_aborts.inc()
+        if self.tracer is not None:
+            self.tracer.on_abort(req)
         return True
 
     # ------------------------------------------------------------------
@@ -393,12 +505,25 @@ class EngineCore:
         self.requests.pop(req.id, None)
         self._stop_state.pop(req.id, None)
         if isinstance(exc, RequestTimeout):
-            self.timed_out_count += 1
+            self._c_timeout.inc()
+            code = "timed_out"
         elif isinstance(exc, RequestRejected):
-            self.shed_count += 1
+            self._c_shed.inc()
+            code = "shed"
         else:
-            self.failed_count += 1
+            self._c_failed.inc()
+            code = "failed"
         self.last_error = f"request {req.id}: {detail}"
+        if self.tracer is not None:
+            self.tracer.on_fail(req, code)
+        if self._step_rec is not None:
+            self._step_rec["quarantined"].append(
+                {"request_id": req.id, "code": code, "detail": detail})
+            self._dump_pending = True
+        elif self.flight is not None:
+            # submit-time shedding happens outside any step: dump the
+            # ring as it stands so the postmortem is not lost
+            self.last_flight_dump = self.flight.dump()
         ev = StreamEvent(req.id, -1, len(req.generated), True,
                          kind="error", detail=detail)
         (events if events is not None else self._pending_events).append(ev)
@@ -530,6 +655,11 @@ class EngineCore:
         req.state = RUNNING
         req.generated.append(tok)
         self.next_tok[slot] = tok
+        if self.tracer is not None:
+            # first-token opens the running span; on_token counts it so
+            # TPOT sees the same token stream the bench does
+            self.tracer.on_first_token(req)
+            self.tracer.on_token(req)
         self._stream(req, events)
 
     # ------------------------------------------------------------------
@@ -635,8 +765,13 @@ class EngineCore:
             # and every other pair stays owed for the next _apply_cow
             mgr.cow_pending = pairs
             raise
+        t0 = self._clock() if self._step_rec is not None else 0.0
         self.pools = copy_pages(self.pools, [s for s, _ in pairs],
                                 [d for _, d in pairs])
+        if self._step_rec is not None:
+            ph = self._step_rec["phases"]
+            ph["cow_replay"] = ph.get("cow_replay", 0.0) \
+                + (self._clock() - t0)
 
     def _grow(self, slot: int, n: int) -> None:
         """``mgr.append(slot, n)`` with page-pressure relief: on
@@ -695,13 +830,48 @@ class EngineCore:
         logits) quarantine the offending request mid-step -- survivors'
         tokens are bit-identical to a fault-free run; only an
         ``EngineError`` (unrecoverable engine-level breach) propagates
-        out."""
-        t0 = time.perf_counter()
+        out -- carrying the flight-recorder dump as ``.flight``."""
+        t0 = self._clock()
+        if self.flight is not None:
+            self._step_rec = {
+                "step": self._c_steps.value, "t_start": t0,
+                "phases": {}, "events": 0, "quarantined": [],
+                "faults_fired": (self.injector.total_fired
+                                 if self.injector is not None else 0),
+            }
+        err: Optional[EngineError] = None
         try:
-            return self._step()
+            events = self._step()
+            if self._step_rec is not None:
+                self._step_rec["events"] = len(events)
+            return events
+        except EngineError as e:
+            err = e
+            raise
         finally:
-            self.step_s_high_water = max(self.step_s_high_water,
-                                         time.perf_counter() - t0)
+            dt = self._clock() - t0
+            self._h_step.observe(dt)
+            self._g_pages.set(self.mgr.used_pages)
+            self._g_pages_hw.set(self.mgr.used_pages)
+            rec, self._step_rec = self._step_rec, None
+            if rec is not None:
+                rec["dur_s"] = dt
+                rec["pages_used"] = self.mgr.used_pages
+                rec["faults_fired"] = \
+                    (self.injector.total_fired
+                     if self.injector is not None else 0) \
+                    - rec["faults_fired"]
+                if err is not None:
+                    rec["error"] = str(err)
+                self.flight.record(rec)
+                for phase, pdt in rec["phases"].items():
+                    self.metrics.observe(
+                        f"engine_phase_{phase}_seconds", pdt)
+                if err is not None or self._dump_pending:
+                    self._dump_pending = False
+                    self.last_flight_dump = self.flight.dump()
+                    if err is not None:
+                        err.flight = self.last_flight_dump
 
     def _step(self) -> List[StreamEvent]:
         events: List[StreamEvent] = self._pending_events
@@ -709,7 +879,23 @@ class EngineCore:
         sched, mgr, serve = self.sched, self.mgr, self.serve
         if not sched.has_work:
             return events
-        self.steps += 1
+        self._c_steps.inc()
+        rec = self._step_rec
+        if rec is not None:
+            # phase marks: elapsed engine-clock time since the previous
+            # mark (cow_replay is accounted inside _apply_cow and may
+            # overlap the prefill/decode phases that triggered it)
+            clock = self._clock
+            last_t = [clock()]
+
+            def mark(phase: str) -> None:
+                t = clock()
+                ph = rec["phases"]
+                ph[phase] = ph.get(phase, 0.0) + (t - last_t[0])
+                last_t[0] = t
+        else:
+            def mark(phase: str) -> None:
+                pass
         ps = mgr.page_size
         self._ensure_pools()
         pre_scan, pre_chunk, decode = self._paged_fns()
@@ -728,10 +914,12 @@ class EngineCore:
                 f"request {req.id}: deadline "
                 f"{req.sampling.deadline_ms:g}ms exceeded",
                 request_id=req.id), events)
+        mark("deadline_sweep")
 
         for req in sched.retire():
             self.requests.pop(req.id, None)
         admitted = sched.admit()
+        mark("schedule")
         # RESUMING path: swap-preempted requests re-admitted by the
         # scheduler get their stashed KV copied back into the pages
         # admission just materialised (their shared prefix was re-shared
@@ -751,7 +939,7 @@ class EngineCore:
                         # drop the stash, requeue.  Strictly slower,
                         # never a failed request.
                         self.pressure.drop(req.id)
-                        self.pressure.stats["swap_fail_downgrades"] += 1
+                        self.pressure._bump("swap_fail_downgrades")
                         req.resume_kind = "recompute"
                         req.resume_shared_len = 0
                         sched.preempt(slot)
@@ -760,6 +948,12 @@ class EngineCore:
                     self.pressure.drop(req.id)
             if req.state == RUNNING:
                 self.next_tok[slot] = req.generated[-1]
+        mark("swap_restore")
+        if rec is not None:
+            rec["waiting"] = len(sched.waiting)
+            rec["resuming"] = len(sched.resuming)
+            rec["prefilling"] = len(sched.prefilling())
+            rec["decoding"] = len(sched.decoding())
         if not admitted and not sched.running():
             if not sched.waiting and not sched.resuming:
                 return events           # everything retired
@@ -874,6 +1068,8 @@ class EngineCore:
                         self._first_token(req, slot,
                                           last_logits[i:i + 1], events)
 
+        mark("prefill")
+
         # ---- decode phase --------------------------------------------
         cand = [(s, r) for s, r in sched.decoding() if not r.done]
         try:
@@ -897,7 +1093,8 @@ class EngineCore:
         if serve.debug_invariants:
             self._check_invariants()
         if not running:
-            self.events_emitted += len(events)
+            mark("decode")
+            self._c_events.inc(len(events))
             return events
         pos_np = np.zeros((serve.max_batch,), np.int32)
         for slot, _ in running:
@@ -911,6 +1108,7 @@ class EngineCore:
         logits, self.pools = decode(
             self.params, jnp.asarray(self.next_tok), self.pools,
             jnp.asarray(table), jnp.asarray(pos_np))
+        mark("decode")
         rowok = None
         if serve.logit_guard == "fail":
             # one device-side reduction + a max_batch-bool transfer: the
@@ -930,6 +1128,7 @@ class EngineCore:
             logits_np = np.asarray(logits)
             picked = {slot: self._sample(req, logits_np[slot])
                       for slot, req in running}
+        mark("sample")
         for slot, req in running:
             try:
                 self._fire("sample")
@@ -943,6 +1142,9 @@ class EngineCore:
             tok = picked[slot]
             req.generated.append(tok)
             self.next_tok[slot] = tok
+            if self.tracer is not None:
+                self.tracer.on_token(req)
             self._stream(req, events)
-        self.events_emitted += len(events)
+        mark("detok")
+        self._c_events.inc(len(events))
         return events

@@ -142,6 +142,11 @@ class ServeEngine:
         return self.core.prefix
 
     @property
+    def metrics(self):
+        """The core's MetricsRegistry (serving/metrics.py)."""
+        return self.core.metrics
+
+    @property
     def prefill_launches(self) -> int:
         return self.core.prefill_launches
 

@@ -50,10 +50,20 @@ class PagedKVCache:
     SCRATCH = 0          # physical page 0: idle-slot write target, never owned
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
-                 max_pages_per_seq: int, *, injector=None):
+                 max_pages_per_seq: int, *, injector=None, metrics=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is scratch)")
         self.num_pages = num_pages
+        # optional MetricsRegistry (serving/metrics.py): page allocations
+        # and copy-on-write copies become cumulative counters
+        self._c_alloc = (metrics.counter(
+            "kv_pages_allocated_total",
+            help="physical page allocations") if metrics is not None
+            else None)
+        self._c_cow = (metrics.counter(
+            "kv_cow_copies_total",
+            help="copy-on-write page copies") if metrics is not None
+            else None)
         # optional FaultInjector (serving/faults.py): when armed, the
         # "page_alloc" site fires in append() BEFORE any mutation, so an
         # injected allocation fault leaves the cache untouched
@@ -220,12 +230,16 @@ class PagedKVCache:
             self.table[slot, len(self._pages[slot]) - 1] = new
             self.decref(old)
             self.cow_pending.append((old, new))
+            if self._c_cow is not None:
+                self._c_cow.inc()
         new_pages = []
         for _ in range(need):
             page = self._take_free()
             self.table[slot, len(self._pages[slot])] = page
             self._pages[slot].append(page)
             new_pages.append(page)
+        if (need or cow) and self._c_alloc is not None:
+            self._c_alloc.inc(need + (1 if cow else 0))
         self._lens[slot] = new_len
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return new_pages
@@ -283,6 +297,14 @@ class PagedKVCache:
         admission keeps this well below 1; optimistic admission with
         preemption should push it to ~1)."""
         return self.peak_used_pages / max(1, self.usable_pages)
+
+    def reset_peak(self) -> None:
+        """Re-arm the high-water mark at the *current* usage (not zero:
+        pages already resident -- live sequences, cached prefixes -- are
+        part of any peak observed from here on).  Called by
+        ``EngineCore.reset_metrics_window()`` so bench warmups do not
+        pollute the timed region's peak."""
+        self.peak_used_pages = self.used_pages
 
     # -- invariants (exercised by the property tests) -------------------
     def check_invariants(self, extern_refs: dict = None) -> None:

@@ -59,7 +59,7 @@ class RadixPrefixIndex:
     resident physical page runs of a :class:`PagedKVCache`."""
 
     def __init__(self, cache: PagedKVCache, page_size: Optional[int] = None,
-                 capacity_pages: int = 0):
+                 capacity_pages: int = 0, *, metrics=None):
         self.cache = cache
         self.page_size = page_size or cache.page_size
         # cap on index-held pages (0 = unbounded, the pool is the bound)
@@ -70,6 +70,17 @@ class RadixPrefixIndex:
         self.stats = {"hits": 0, "misses": 0, "hit_tokens": 0,
                       "inserted_blocks": 0, "evicted_blocks": 0,
                       "freed_pages": 0}
+        # optional MetricsRegistry (serving/metrics.py): the stats dict
+        # stays the authority stats() exposes, the registry mirrors each
+        # key as a cumulative ``prefix_<key>_total`` counter
+        self._counters = ({k: metrics.counter(f"prefix_{k}_total")
+                           for k in self.stats}
+                          if metrics is not None else None)
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.stats[key] += n
+        if self._counters is not None:
+            self._counters[key].inc(n)
 
     # -- introspection --------------------------------------------------
     def __len__(self) -> int:
@@ -131,8 +142,8 @@ class RadixPrefixIndex:
 
     def record_match(self, matched_tokens: int) -> None:
         """Count one consumed match in the hit/miss stats."""
-        self.stats["hits" if matched_tokens else "misses"] += 1
-        self.stats["hit_tokens"] += matched_tokens
+        self._bump("hits" if matched_tokens else "misses")
+        self._bump("hit_tokens", matched_tokens)
 
     def insert(self, tokens, pages: List[int]) -> int:
         """Publish the full blocks of ``tokens`` backed by ``pages``
@@ -158,7 +169,7 @@ class RadixPrefixIndex:
             else:
                 child.last_used = now
             node = child
-        self.stats["inserted_blocks"] += new
+        self._bump("inserted_blocks", new)
         self.trim_to_capacity()
         return new
 
@@ -170,9 +181,9 @@ class RadixPrefixIndex:
     def _remove_leaf(self, leaf: _Node) -> bool:
         del leaf.parent.children[leaf.block]
         self._nodes -= 1
-        self.stats["evicted_blocks"] += 1
+        self._bump("evicted_blocks")
         freed = self.cache.decref(leaf.page)
-        self.stats["freed_pages"] += freed
+        self._bump("freed_pages", freed)
         return freed
 
     def evict(self, n_pages: int) -> int:

@@ -171,7 +171,7 @@ class PressureManager:
                  cache: PagedKVCache, sched: ContinuousBatchScheduler, *,
                  latency_model: Optional[OffloadLatencyModel] = None,
                  swap_latency_s: float = 5e-4, prefix_cache=None,
-                 injector=None):
+                 injector=None, metrics=None, tracer=None):
         if serve.preempt_policy not in ("swap", "recompute", "auto"):
             raise ValueError(
                 f"unknown preempt_policy {serve.preempt_policy!r}")
@@ -192,6 +192,21 @@ class PressureManager:
                       "cache_evictions": 0, "swap_drops": 0,
                       "abort_drops": 0, "fail_drops": 0,
                       "swap_retries": 0, "swap_fail_downgrades": 0}
+        # telemetry (serving/metrics.py): the stats dict stays the
+        # authority stats() exposes; a registry mirrors every key as a
+        # cumulative ``pressure_<key>_total`` counter, and the tracer
+        # sees swap-out/in/drop so the "swapped" span closes exactly
+        # when the stash dies
+        self.metrics = metrics
+        self.tracer = tracer
+        self._counters = ({k: metrics.counter(f"pressure_{k}_total")
+                           for k in self.stats}
+                          if metrics is not None else None)
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        self.stats[key] += n
+        if self._counters is not None:
+            self._counters[key].inc(n)
 
     # -- transient-fault retry --------------------------------------------
     def _swap_op(self, site: str, fn):
@@ -211,7 +226,7 @@ class PressureManager:
             except OutOfPages:
                 raise
             except RuntimeError:            # InjectedFault or real DMA error
-                self.stats["swap_retries"] += 1
+                self._bump("swap_retries")
                 if attempt < self.swap_retries \
                         and self.swap_retry_backoff_s > 0:
                     time.sleep(min(self.swap_retry_backoff_s * 2 ** attempt,
@@ -244,7 +259,7 @@ class PressureManager:
         happen for pool-validated requests: the protected slot alone
         always fits an otherwise-empty pool)."""
         if self.prefix_cache is not None and self.prefix_cache.evict(1):
-            self.stats["cache_evictions"] += 1
+            self._bump("cache_evictions")
             return None
         victim = self.sched.preemption_victim(protect)
         if victim is None:
@@ -286,19 +301,21 @@ class PressureManager:
                 # D2H kept failing past the retry budget: fall back to
                 # recompute -- strictly slower, never incorrect
                 kind = "recompute"
-                self.stats["swap_fail_downgrades"] += 1
+                self._bump("swap_fail_downgrades")
         if kind == "swap":
             self.host_pool.put(req.id, host_data, n_pages - shared)
-            self.stats["swaps"] += 1
-            self.stats["swap_bytes_out"] += _nbytes(host_data)
+            self._bump("swaps")
+            self._bump("swap_bytes_out", _nbytes(host_data))
             req.resume_shared_len = shared_len
+            if self.tracer is not None:
+                self.tracer.on_swap_out(req)
         else:
-            self.stats["recomputes"] += 1
+            self._bump("recomputes")
             req.resume_shared_len = 0
         req.resume_kind = kind
         req.resume_len = written
         self.sched.preempt(slot)
-        self.stats["preemptions"] += 1
+        self._bump("preemptions")
         return req
 
     # -- restore ---------------------------------------------------------
@@ -326,9 +343,11 @@ class PressureManager:
                 f"request {req.id}: swap-in failed past "
                 f"{self.swap_retries} retries")
         self.host_pool.pop(req.id)
-        self.stats["swap_bytes_in"] += _nbytes(host_data)
+        self._bump("swap_bytes_in", _nbytes(host_data))
         req.resume_kind = None
         req.resume_shared_len = 0
+        if self.tracer is not None:
+            self.tracer.on_swap_in(req)
         return new_pools
 
     def drop(self, request_id: int, *, reason: str = "downgrade") -> None:
@@ -338,5 +357,7 @@ class PressureManager:
         swap-preempted (``reason="abort"``), or quarantined after a
         request-level failure (``reason="fail"``)."""
         self.host_pool.pop(request_id)
-        self.stats[{"abort": "abort_drops",
-                    "fail": "fail_drops"}.get(reason, "swap_drops")] += 1
+        self._bump({"abort": "abort_drops",
+                    "fail": "fail_drops"}.get(reason, "swap_drops"))
+        if self.tracer is not None:
+            self.tracer.on_swap_drop(request_id)

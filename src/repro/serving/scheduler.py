@@ -157,6 +157,11 @@ class Request:
     # -- stop-string bookkeeping ---------------------------------------
     emitted: int = 0                   # generated tokens already streamed
     stop_matched: bool = False         # a stop string fired (terminal)
+    # -- telemetry (serving/metrics.py) --------------------------------
+    # timestamped lifecycle events on the engine clock, appended by the
+    # LifecycleTracer at every state transition: ("submitted", t),
+    # ("prefilling", t), ("first-token", t), ("preempted:swap", t), ...
+    trace: List[Tuple[str, float]] = field(default_factory=list)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -240,10 +245,15 @@ class ContinuousBatchScheduler:
 
     def __init__(self, cache: PagedKVCache, max_slots: Optional[int] = None,
                  *, admission: str = "optimistic", watermark_pages: int = 1,
-                 prefix_cache=None):
+                 prefix_cache=None, tracer=None):
         if admission not in ("optimistic", "reserved"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.cache = cache
+        # LifecycleTracer (serving/metrics.py) or None: the scheduler
+        # owns the admit/preempt/retire transitions, so it reports them;
+        # terminal abort/fail spans are the engine core's to close (it
+        # alone can tell an abort from a quarantine)
+        self.tracer = tracer
         self.max_slots = max_slots or cache.max_slots
         assert self.max_slots <= cache.max_slots
         self.admission = admission
@@ -324,6 +334,8 @@ class ContinuousBatchScheduler:
                 self._admitted_at.pop(req.id, None)
                 self.finished.append(req)
                 self.finished_count += 1
+                if self.tracer is not None:
+                    self.tracer.on_retire(req)
                 retired.append(req)
         return retired
 
@@ -471,6 +483,8 @@ class ContinuousBatchScheduler:
             self._admitted_at[req.id] = self._admit_seq
             self._admit_seq += 1
             admitted.append((slot, req))
+            if self.tracer is not None:
+                self.tracer.on_admit(req, resumed)
         return admitted
 
     # -- preemption (page pressure) --------------------------------------
@@ -502,6 +516,10 @@ class ContinuousBatchScheduler:
         idx = sum(1 for r in self.resuming if r.arrival < req.arrival)
         self.resuming.insert(idx, req)
         self.preempt_count += 1
+        if self.tracer is not None:
+            # resume_kind was set by the PressureManager before this call,
+            # so the trace event carries the real resume strategy
+            self.tracer.on_preempt(req)
         return req
 
     # -- abort ------------------------------------------------------------

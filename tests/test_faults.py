@@ -576,6 +576,9 @@ def test_chaos_soak_all_sites(built):
     assert core.mgr.used_pages == core.prefix.cached_pages
     assert len(core.pressure.host_pool) == 0, "orphaned swap stash"
     assert not core.mgr.cow_pending, "stale COW debt"
+    # telemetry: every span a terminal transition should have closed
+    # (finished, quarantined, shed, timed out AND aborted) actually is
+    assert core.tracer.open_span_count() == 0, "leaked lifecycle spans"
     core.mgr.check_invariants(extern_refs=core.prefix.page_refs())
 
     # every request reached exactly one terminal state, and survivors
