@@ -742,6 +742,112 @@ def observability(arch: str = "gemma2-2b", n_requests: int = 10,
     return out
 
 
+def speculation(arch: str = "gemma2-2b", n_requests: int = 6,
+                max_batch: int = 3, page_size: int = 0,
+                spec_tokens: int = 4, gen_tokens: int = 24,
+                repeats: int = 3, seed: int = 0, smoke: bool = True,
+                built=None) -> dict:
+    """Speculative decoding on a lookup-friendly workload: repetitive
+    (tiled-motif) greedy prompts through the engine with prompt-lookup
+    drafting on vs off.  Reports the accept rate, per-token time both
+    ways (same tokens -- ``tokens_match`` asserts the greedy
+    bit-identity contract), and ``off_step_time_ratio``: two *identical*
+    spec-off engines timed interleaved, best-of-``repeats`` each -- the
+    off path shares no code with speculation beyond a per-step ``is
+    None`` branch, so CI gates the ratio at 1.02 (measurement noise)."""
+    page_size = page_size or (
+        128 if jax.default_backend() == "tpu" else 16)
+    cfg, model, params = built or _build(arch, smoke)
+
+    rng = np.random.default_rng(seed)
+    prompts = []
+    for i in range(n_requests):
+        motif = rng.integers(1, cfg.vocab_size, size=5 + i % 3).tolist()
+        n = 24 + 4 * (i % 4)
+        prompts.append(np.array((motif * (n // len(motif) + 1))[:n],
+                                np.int32))
+    max_seq_len = max(p.size for p in prompts) + gen_tokens + page_size
+    base = ServeConfig(max_batch=max_batch, max_seq_len=max_seq_len,
+                       page_size=page_size)
+
+    def drive(core, rep):
+        for i, p in enumerate(prompts):
+            core.add_request(p, SamplingParams(max_new_tokens=gen_tokens),
+                             request_id=1000 * rep + i)
+        toks = {i: [] for i in range(n_requests)}
+        steps0, t0 = core.steps, time.perf_counter()
+        while core.has_work:
+            for ev in core.step():
+                if ev.kind == "token":
+                    toks[ev.request_id % 1000].append(ev.token)
+        dt = time.perf_counter() - t0
+        assert core.mgr.used_pages == 0, "pages leaked after drain"
+        return toks, dt, core.steps - steps0
+
+    def timed(core):
+        """Warm (compile), then best-of-``repeats`` full drains.  The
+        greedy reps are identical, so per-rep spec counters are just
+        the timed totals divided by ``repeats``."""
+        drive(core, 0)
+        core.reset()
+        core.reset_metrics_window()
+        launch0, best = core.spec_launches, None
+        for rep in range(1, repeats + 1):
+            toks, dt, steps = drive(core, rep)
+            core.reset()
+            if best is None or dt < best[1]:
+                best = (toks, dt, steps)
+        return best + ((core.spec_launches - launch0) // repeats,)
+
+    core_off = EngineCore(model, params, cfg, base)
+    core_on = EngineCore(model, params, cfg, dataclasses.replace(
+        base, spec_mode="lookup", spec_tokens=spec_tokens))
+    off_toks, off_dt, off_steps, _ = timed(core_off)
+    on_toks, on_dt, on_steps, on_launches = timed(core_on)
+    sp = core_on.stats()["spec"]         # windows cover the timed reps
+
+    # off-mode overhead: two identical spec-off engines, interleaved
+    # best-of-``repeats`` -- any ratio above noise would mean the off
+    # path is paying for a feature it never runs
+    core_a = EngineCore(model, params, cfg, base)
+    core_b = EngineCore(model, params, cfg, base)
+    for c in (core_a, core_b):
+        drive(c, 0)
+        c.reset()
+    best_a = best_b = None
+    for rep in range(1, repeats + 1):
+        _, dt_a, _ = drive(core_a, rep)
+        core_a.reset()
+        _, dt_b, _ = drive(core_b, rep)
+        core_b.reset()
+        best_a = dt_a if best_a is None else min(best_a, dt_a)
+        best_b = dt_b if best_b is None else min(best_b, dt_b)
+
+    n_gen = sum(len(t) for t in off_toks.values())
+    return {
+        "requests": n_requests,
+        "spec_tokens": spec_tokens,
+        "generated_tokens": n_gen,
+        "tokens_match": bool(on_toks == off_toks),
+        "drafted": sp["drafted"] // repeats,
+        "accepted": sp["accepted"] // repeats,
+        "accept_rate": round(sp["accept_rate"], 3),
+        "off": {
+            "ms_per_step": round(1e3 * off_dt / off_steps, 2),
+            "tpot_ms": round(1e3 * off_dt / n_gen, 2),
+            "engine_steps": off_steps,
+        },
+        "on": {
+            "ms_per_step": round(1e3 * on_dt / on_steps, 2),
+            "tpot_ms": round(1e3 * on_dt / n_gen, 2),
+            "engine_steps": on_steps,
+            "verify_launches": on_launches,
+        },
+        "tpot_speedup": round(off_dt / on_dt, 3),
+        "off_step_time_ratio": round(best_b / best_a, 3),
+    }
+
+
 def _distributed_child(arch: str, n_requests: int, seed: int,
                        smoke: bool = True) -> None:
     """Runs INSIDE the forced-multi-device child process: tp=1 oracle,
@@ -872,6 +978,11 @@ def main():
     ap.add_argument("--trace-out", default=os.path.join(
         REPO_ROOT, "BENCH_serving_trace.json"),
         help="flight-recorder Chrome trace artifact path ('' = skip)")
+    ap.add_argument("--skip-speculation", action="store_true",
+                    help="skip the speculative-decoding section")
+    ap.add_argument("--speculation-requests", type=int, default=6)
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="max draft tokens per request per step")
     ap.add_argument("--skip-distributed", action="store_true",
                     help="skip the tensor-parallel serving section")
     ap.add_argument("--distributed-requests", type=int, default=6)
@@ -947,6 +1058,13 @@ def main():
             page_size=args.page_size,
             mean_gap_steps=args.mean_gap_steps, seed=args.seed,
             smoke=not args.full, trace_out=args.trace_out)
+    if not args.skip_speculation:
+        # prompt-lookup speculation on a repetitive greedy workload:
+        # same tokens in fewer, fatter steps; off mode must stay free
+        report["speculation"] = speculation(
+            arch=args.arch, n_requests=args.speculation_requests,
+            page_size=args.page_size, spec_tokens=args.spec_tokens,
+            seed=args.seed, smoke=not args.full)
     if not args.skip_distributed:
         # tensor-parallel engine on a forced multi-device CPU mesh:
         # bit-identity vs tp=1 and tiled- vs single-AllReduce step time

@@ -340,6 +340,25 @@ class ServeConfig:
     # dump (and the Chrome trace_event export).
     flight_recorder_steps: int = 64
 
+    # --- speculative decoding (serving/spec.py) -------------------------
+    # "off" keeps the one-token-per-launch decode step byte-for-byte;
+    # "lookup" drafts continuation tokens from each request's own
+    # prompt+generated text (prompt-lookup n-gram matching, no second
+    # model) and verifies all of them in one chunked paged-prefill
+    # launch.  Greedy token streams are bit-identical either way.
+    spec_mode: str = "off"
+    # Max drafted tokens per request per step (the verify launch scores
+    # spec_tokens + 1 positions).  Per-request adaptive K shrinks below
+    # this from a running accept-rate EMA.
+    spec_tokens: int = 4
+    # Suffix n-gram lengths the prompt-lookup drafter matches, tried
+    # longest-first.
+    spec_ngram_max: int = 3
+    spec_ngram_min: int = 1
+    # EMA smoothing for the per-request accept-rate estimate driving
+    # adaptive K; 0 disables adaptation (always draft spec_tokens).
+    spec_ema_alpha: float = 0.5
+
     # --- tensor parallelism (sharding/tp.py) ----------------------------
     # Device count to shard attention + KV page pools over.  Factored as
     # gcd(tp, num_kv_heads) kv-head groups x within-page row sub-shards

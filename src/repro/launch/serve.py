@@ -41,7 +41,9 @@ def _run_stream(model, params, cfg, args) -> None:
         max_seq_len=args.prompt_len + args.gen + page_size,
         page_size=page_size,
         max_waiting=args.max_waiting,
-        queue_policy=args.queue_policy)
+        queue_policy=args.queue_policy,
+        spec_mode=args.spec_mode,
+        spec_tokens=args.spec_tokens if args.spec_tokens > 0 else 4)
     core = EngineCore(model, params, cfg, serve)
     rng = np.random.default_rng(0)
     # --top-k 1 (the dense-path greedy default) would make the "sampled"
@@ -56,9 +58,17 @@ def _run_stream(model, params, cfg, args) -> None:
         else:
             sp = SamplingParams(max_new_tokens=args.gen,
                                 deadline_ms=deadline)   # greedy
+        if args.spec_mode != "off":
+            # prompt-lookup thrives on repetitive text; tile a short
+            # motif so the demo shows a real accept rate
+            motif = rng.integers(1, cfg.vocab_size, size=7).tolist()
+            prompt = np.array(
+                (motif * (args.prompt_len // 7 + 1))[:args.prompt_len],
+                np.int32)
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len)
         try:
-            core.add_request(rng.integers(0, cfg.vocab_size,
-                                          size=args.prompt_len), sp)
+            core.add_request(prompt, sp)
         except RequestRejected as e:
             # queue_policy="reject" surfaces a structured error at
             # submission; the engine keeps serving what it admitted
@@ -98,6 +108,11 @@ def _run_stream(model, params, cfg, args) -> None:
           f"recompute), slowest step {hw * 1e3:.1f}ms"
           + (f", last error: {s['health']['last_error']}"
              if s["health"]["last_error"] else ""))
+    if "spec" in s:
+        sp = s["spec"]
+        print(f"speculation: {sp['accepted']}/{sp['drafted']} drafts "
+              f"accepted ({sp['accept_rate']:.0%}) over "
+              f"{sp['verify_launches']} verify launches")
     if core.tracer is not None and core.tracer.completed:
         ttfts = sorted(r["first_token_t"] - r["submit_t"]
                        for r in core.tracer.completed
@@ -140,6 +155,15 @@ def main(argv=None):
                     choices=["reject", "shed_oldest"],
                     help="full-queue policy: reject new arrivals or "
                          "shed the oldest waiting request")
+    ap.add_argument("--spec-mode", default="off",
+                    choices=["off", "lookup"],
+                    help="with --stream: speculative decoding drafter "
+                         "(lookup = prompt-lookup n-gram matching; "
+                         "greedy output is bit-identical either way)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="max draft tokens per request per step "
+                         "(0 = engine default of 4; only with "
+                         "--spec-mode lookup)")
     ap.add_argument("--metrics", nargs="?", const="-", default=None,
                     metavar="TRACE_JSON",
                     help="with --stream: print the Prometheus text "

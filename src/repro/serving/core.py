@@ -57,6 +57,8 @@ from repro.serving.pressure import PressureManager, copy_pages
 from repro.serving.scheduler import (ABORTED, FAILED, FINISHED, PREFILLING,
                                      RUNNING, ContinuousBatchScheduler,
                                      Request, SamplingParams)
+from repro.serving.spec import (PromptLookupDrafter, verify_greedy,
+                                verify_residual)
 from repro.sharding.tp import plan_tp, tp_context
 
 
@@ -130,6 +132,13 @@ class EngineCore:
         if self.serve.queue_policy not in ("reject", "shed_oldest"):
             raise ValueError(
                 f"unknown queue_policy {self.serve.queue_policy!r}")
+        if self.serve.spec_mode not in ("off", "lookup"):
+            raise ValueError(
+                f"unknown spec_mode {self.serve.spec_mode!r}")
+        if self.serve.spec_mode != "off" and self.serve.spec_tokens < 1:
+            raise ValueError(
+                f"spec_tokens must be >= 1 with spec_mode="
+                f"{self.serve.spec_mode!r}, got {self.serve.spec_tokens}")
         # fault-injection harness (serving/faults.py): threaded through
         # the page manager and pressure manager; None costs nothing
         self.injector = injector
@@ -162,6 +171,26 @@ class EngineCore:
                                       "waiting queue")
         self._c_timeout = m.counter("engine_requests_timed_out_total",
                                     help="deadline_ms expiries")
+        # speculative decoding (serving/spec.py): drafted/accepted token
+        # counters plus accept-rate and accepted-run-length histograms;
+        # created unconditionally (a handful of registry entries) but
+        # only touched when spec_mode != "off"
+        self._c_spec_drafted = m.counter(
+            "engine_spec_drafted_total",
+            help="speculative tokens drafted for verification")
+        self._c_spec_accepted = m.counter(
+            "engine_spec_accepted_total",
+            help="drafted tokens accepted by verification")
+        self._h_spec_accept = m.histogram(
+            "engine_spec_accept_rate",
+            buckets=(0.0, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875,
+                     1.0),
+            help="per-request accept rate per verify step")
+        self._h_spec_run = m.histogram(
+            "engine_spec_run_length",
+            buckets=tuple(float(i)
+                          for i in range(self.serve.spec_tokens + 1)),
+            help="accepted draft run length per verify step")
         self._h_step = m.histogram("engine_step_seconds",
                                    help="step() wall-clock on the "
                                         "engine clock")
@@ -210,6 +239,11 @@ class EngineCore:
         # prefill chunk *launches* (calls, not traces): prefix-cache hits
         # skip the matched prefix's launches entirely, asserted in tests
         self.prefill_launches = 0
+        # speculative verify launches/traces, counted apart from prefill
+        # so the prefill trace/launch assertions hold with spec on, and
+        # spec_mode="off" provably never touches the verify fn
+        self.spec_launches = 0
+        self.spec_trace_count = 0
         self._warned_legacy_sampling = False
         self._next_id = 0
         self.reset()
@@ -244,6 +278,17 @@ class EngineCore:
                                         tracer=self.tracer)
         if self.tracer is not None:
             self.tracer.reset()        # every request is gone with the state
+        # speculation drafter (serving/spec.py): per-request n-gram
+        # indexes and accept-rate EMAs die with the requests on reset.
+        # ``spec is None`` IS the off switch -- the decode phase branches
+        # on it once per step and the off path stays byte-for-byte the
+        # plain decode step.
+        self.spec = (PromptLookupDrafter(
+            max_tokens=serve.spec_tokens,
+            ngram_max=serve.spec_ngram_max,
+            ngram_min=serve.spec_ngram_min,
+            ema_alpha=serve.spec_ema_alpha)
+            if serve.spec_mode == "lookup" else None)
         self.pools = None              # device pools, materialised lazily
         self.next_tok = np.zeros((serve.max_batch,), np.int32)
         self.requests: Dict[int, Request] = {}     # live (unfinished) only
@@ -359,6 +404,16 @@ class EngineCore:
                 "step_s_high_water": self.step_s_high_water,
             },
         }
+        if self.spec is not None:
+            drafted = self._c_spec_drafted.window
+            accepted = self._c_spec_accepted.window
+            out["spec"] = {
+                "drafted": drafted,
+                "accepted": accepted,
+                "accept_rate": (accepted / drafted) if drafted else 0.0,
+                "verify_launches": self.spec_launches,
+                "verify_trace_count": self.spec_trace_count,
+            }
         if self.injector is not None:
             out["injected_faults"] = self.injector.stats()
         if self.prefix is not None:
@@ -473,6 +528,8 @@ class EngineCore:
             self.pressure.drop(request_id, reason="abort")
         self.requests.pop(request_id, None)
         self._stop_state.pop(request_id, None)
+        if self.spec is not None:
+            self.spec.forget(request_id)
         self._c_aborts.inc()
         if self.tracer is not None:
             self.tracer.on_abort(req)
@@ -504,6 +561,8 @@ class EngineCore:
         req.slot = None
         self.requests.pop(req.id, None)
         self._stop_state.pop(req.id, None)
+        if self.spec is not None:
+            self.spec.forget(req.id)
         if isinstance(exc, RequestTimeout):
             self._c_timeout.inc()
             code = "timed_out"
@@ -539,10 +598,15 @@ class EngineCore:
     def _paged_fns(self):
         """Jitted paged fns keyed on the resolved impl so a serve-config
         change after first use is honoured: (scan prefill, chunked
-        prefill, fused decode step).  The scan prefill retraces once per
-        distinct prompt length (that is why it is the legacy path); the
-        chunked prefill traces once per launch width -- chunk shape,
-        page-table width and position offsets are all runtime values."""
+        prefill, fused decode step, speculative verify).  The scan
+        prefill retraces once per distinct prompt length (that is why it
+        is the legacy path); the chunked prefill traces once per launch
+        width -- chunk shape, page-table width and position offsets are
+        all runtime values.  The verify fn is the chunked prefill
+        forward returning the FULL (B, C, V) logits (acceptance needs
+        every position, not just the last valid row); it is only ever
+        traced when a verify step actually launches, so spec_mode="off"
+        never pays for it."""
         impl = self._paged_impl()
         if (impl == "paged" and jax.default_backend() == "tpu"
                 and self.serve.page_size % 128):
@@ -587,9 +651,16 @@ class EngineCore:
                     axis=1)[:, 0]
                 return pools, last
 
+            def verify(params, chunk, pools, table, pos_start, n_valid):
+                core.spec_trace_count += 1     # host-side, trace-time
+                logits, pools = model.prefill_chunk_paged(
+                    params, chunk, pools, table, pos_start, n_valid,
+                    impl=impl)
+                return pools, logits
+
             self._paged_fn_cache[key] = tuple(
                 self._tp_wrap(jax.jit(f, donate_argnums=(2,)))
-                for f in (pre_scan, pre_chunk, dec))
+                for f in (pre_scan, pre_chunk, dec, verify))
         return self._paged_fn_cache[key]
 
     def _tp_wrap(self, fn):
@@ -898,7 +969,7 @@ class EngineCore:
                 pass
         ps = mgr.page_size
         self._ensure_pools()
-        pre_scan, pre_chunk, decode = self._paged_fns()
+        pre_scan, pre_chunk, decode, verify = self._paged_fns()
 
         # ---- deadline sweep ------------------------------------------
         # before admission, so an already-expired waiting request never
@@ -918,6 +989,8 @@ class EngineCore:
 
         for req in sched.retire():
             self.requests.pop(req.id, None)
+            if self.spec is not None:
+                self.spec.forget(req.id)
         admitted = sched.admit()
         mark("schedule")
         # RESUMING path: swap-preempted requests re-admitted by the
@@ -1078,6 +1151,14 @@ class EngineCore:
             self._fire("decode_launch")
         except InjectedFault:
             cand = []
+        if self.spec is not None and cand:
+            # speculative path: draft + multi-token verify replaces the
+            # one-token decode launch.  ``spec is None`` keeps the plain
+            # path below byte-for-byte (greedy output is bit-identical
+            # either way; only the launch count differs).
+            self._spec_decode(cand, events, mark, verify)
+            self._c_events.inc(len(events))
+            return events
         # materialise the page (maybe a fresh one) every running
         # sequence's next token will be written to -- evicting other
         # sequences under pressure -- THEN snapshot the table for the
@@ -1148,3 +1229,125 @@ class EngineCore:
         mark("detok")
         self._c_events.inc(len(events))
         return events
+
+    # ------------------------------------------------------------------
+    # speculative decode phase (serving/spec.py)
+    # ------------------------------------------------------------------
+    def _spec_decode(self, cand, events: List[StreamEvent], mark,
+                     verify) -> None:
+        """One speculative step for every running slot: draft up to K
+        continuation tokens from the request's own text, append them to
+        the paged KV (COW-safe multi-token ``append``) and score all
+        K+1 positions in ONE chunked paged-prefill launch, then keep
+        the accepted prefix plus one correction/bonus token and
+        ``truncate`` the rejected rows' KV exactly -- restoring the
+        RUNNING invariant ``seq_len == len(prompt)+len(generated)-1``
+        so prefix sharing, preemption/swap and quarantine compose
+        unchanged.  The ``spec_verify`` fault site fires before any
+        drafting; an injected fault degrades the step to K=0 (a
+        one-token verify -- same tokens, strictly no speculation)."""
+        sched, mgr, serve = self.sched, self.mgr, self.serve
+        width = serve.spec_tokens + 1
+        try:
+            self._fire("spec_verify")
+            drafts = {}
+            for slot, req in cand:
+                # cap K so a fully-accepted run plus its bonus token
+                # never overshoots max_new_tokens (also bounds page
+                # growth to what submit-time validation admitted)
+                cap = min(serve.spec_tokens,
+                          req.max_new_tokens - len(req.generated) - 1)
+                drafts[slot] = (self.spec.propose(req)[:cap]
+                                if cap > 0 else [])
+        except InjectedFault:
+            drafts = {slot: [] for slot, _ in cand}
+        for slot, req in cand:
+            if sched.slots[slot] is not req:
+                continue                # evicted by an earlier _grow
+            try:
+                self._grow(slot, 1 + len(drafts[slot]))
+            except InjectedFault as e:
+                self._quarantine(req, e, events)
+        running = [(s, r) for s, r in cand if sched.slots[s] is r]
+        if serve.debug_invariants:
+            self._check_invariants()
+        if not running:
+            mark("verify")
+            return
+        # slot-indexed batch like the decode step, but every row NOT in
+        # the verify batch gets a scratch table row: with n_valid=0 all
+        # its K/V writes land in the scratch page, so prefilling, done
+        # and idle slots never see this launch
+        buf = np.zeros((serve.max_batch, width), np.int32)
+        table = np.full((serve.max_batch, mgr.max_pages_per_seq),
+                        mgr.SCRATCH, np.int32)
+        pos0 = np.zeros((serve.max_batch,), np.int32)
+        nval = np.zeros((serve.max_batch,), np.int32)
+        for slot, req in running:
+            d = drafts[slot]
+            buf[slot, 0] = self.next_tok[slot]
+            if d:
+                buf[slot, 1:1 + len(d)] = d
+            table[slot] = mgr.table[slot]
+            pos0[slot] = mgr.seq_len(slot) - (1 + len(d))
+            nval[slot] = 1 + len(d)
+        self.spec_launches += 1
+        self.pools, logits = verify(
+            self.params, jnp.asarray(buf), self.pools,
+            jnp.asarray(table), jnp.asarray(pos0), jnp.asarray(nval))
+        mark("verify")
+        rowok = None
+        if serve.logit_guard == "fail":
+            # (B, width) bools: acceptance guards each row only when its
+            # logits are consumed, so K=0 matches the plain path exactly
+            rowok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        argm = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        logits_np = (np.asarray(logits)
+                     if any(not r.sampling.greedy for _, r in running)
+                     else None)
+        survivors = []
+        for slot, req in running:
+            d = drafts[slot]
+            sp = req.sampling
+            old_len = int(pos0[slot])
+            ok_row = rowok[slot] if rowok is not None else None
+            try:
+                self._fire("sample")
+                if sp.greedy:
+                    toks, acc = verify_greedy(
+                        d, argm[slot], stop_ids=req.stop_token_ids,
+                        budget=req.max_new_tokens - len(req.generated),
+                        row_ok=ok_row, request_id=req.id,
+                        n0=len(req.generated))
+                else:
+                    toks, acc = verify_residual(
+                        d, logits_np[slot], seed=sp.seed,
+                        n0=len(req.generated),
+                        temperature=sp.temperature, top_k=sp.top_k,
+                        stop_ids=req.stop_token_ids,
+                        budget=req.max_new_tokens - len(req.generated),
+                        row_ok=ok_row, request_id=req.id)
+            except (InjectedFault, RequestError) as e:
+                self._quarantine(req, e, events)
+                continue
+            if d:
+                self.spec.observe(req.id, len(d), acc)
+                self._c_spec_drafted.inc(len(d))
+                self._c_spec_accepted.inc(acc)
+                self._h_spec_accept.observe(acc / len(d))
+                self._h_spec_run.observe(float(acc))
+            for tok in toks:
+                req.generated.append(int(tok))
+                if self.tracer is not None:
+                    self.tracer.on_token(req)
+            self.next_tok[slot] = req.generated[-1]
+            # exact rollback: drop the rejected drafts' KV rows and the
+            # (never-written) row grown for the newest sampled token
+            mgr.truncate(slot, old_len + len(toks))
+            survivors.append((slot, req))
+        if serve.debug_invariants:
+            self._check_invariants()
+        mark("sample")
+        for slot, req in survivors:
+            self._stream(req, events)
+        mark("detok")

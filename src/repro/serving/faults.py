@@ -123,6 +123,7 @@ SITES: Tuple[str, ...] = (
     "prefill_launch",  # one chunked/scan prefill launch group
     "decode_launch",   # the fused decode step for all running slots
     "sample",          # per-request token sampling
+    "spec_verify",     # speculative draft+verify step (falls back to K=0)
 )
 
 

@@ -244,6 +244,39 @@ class PagedKVCache:
         self.peak_used_pages = max(self.peak_used_pages, self.used_pages)
         return new_pages
 
+    def truncate(self, slot: int, n_tokens: int) -> list:
+        """Roll a slot back to ``n_tokens`` (speculative-decode rejection:
+        drafted rows past the accept point are discarded).  Whole tail
+        pages the shorter sequence no longer covers are decref'd -- a
+        page shared with another slot or the prefix index stays resident
+        for its other holders -- and their table entries reset to
+        scratch.  Pending copy-on-write debts whose destination page
+        just went back to the free list are cancelled, exactly like
+        ``scheduler.abort`` (a freed page may be reallocated before the
+        replay runs).  Returns the dropped pages.  Stale rows left in
+        the kept tail page need no device-side cleanup: the paged
+        kernels mask by sequence length and the next append overwrites
+        them."""
+        if not self._active[slot]:
+            raise ValueError(f"slot {slot} not active")
+        cur = int(self._lens[slot])
+        if not 0 <= n_tokens <= cur:
+            raise ValueError(
+                f"slot {slot}: truncate to {n_tokens} outside [0, {cur}]")
+        keep = -(-n_tokens // self.page_size)
+        dropped = self._pages[slot][keep:]
+        freed = set()
+        for page in reversed(dropped):
+            if self.decref(page):
+                freed.add(page)
+        del self._pages[slot][keep:]
+        self.table[slot, keep:] = self.SCRATCH
+        self._lens[slot] = n_tokens
+        if freed and self.cow_pending:
+            self.cow_pending = [(s, d) for s, d in self.cow_pending
+                                if d not in freed]
+        return dropped
+
     def free(self, slot: int) -> None:
         """Retire a slot: drop its reference on every page (pages whose
         last reference falls return to the free list) and reset its

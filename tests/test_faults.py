@@ -89,7 +89,8 @@ def test_injector_validates_sites_and_schedules():
     with pytest.raises(ValueError, match="burst"):
         inj.arm("sample", burst=(0, 1))
     assert set(SITES) == {"page_alloc", "swap_d2h", "swap_h2d", "cow_copy",
-                          "prefill_launch", "decode_launch", "sample"}
+                          "prefill_launch", "decode_launch", "sample",
+                          "spec_verify"}
 
 
 def test_error_taxonomy_shapes():
@@ -373,14 +374,14 @@ def _poison_slot0_decode(core):
     smoke model ties embeddings, so a NaN embed row NaNs one logit
     *column* for every co-batched request.)"""
     import jax.numpy as jnp
-    pre_scan, pre_chunk, dec = core._paged_fns()
+    pre_scan, pre_chunk, dec, verify = core._paged_fns()
 
     def poisoned_dec(params, tok, pools, table, pos):
         logits, pools = dec(params, tok, pools, table, pos)
         return logits.at[0].set(jnp.nan), pools
 
     core._paged_fn_cache[(core._paged_impl(), core.tp_plan)] = (
-        pre_scan, pre_chunk, poisoned_dec)
+        pre_scan, pre_chunk, poisoned_dec, verify)
 
 
 def test_logit_guard_fails_only_the_nan_request(built):

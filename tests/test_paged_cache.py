@@ -104,6 +104,93 @@ def test_release_and_adopt_pages():
     assert c.peak_utilization == pytest.approx(3 / 7)
 
 
+def test_append_k_crosses_multiple_page_boundaries():
+    """One multi-token append may materialise several pages (the
+    speculative verify path grows 1+K rows at once)."""
+    c = PagedKVCache(num_pages=8, page_size=4, max_slots=1,
+                     max_pages_per_seq=6)
+    c.alloc(0)
+    first = c.append(0, 3)
+    new = c.append(0, 10)                       # 3 -> 13 tokens: 1 -> 4 pages
+    assert len(first) == 1 and len(new) == 3
+    assert c.seq_len(0) == 13 and c.used_pages == 4
+    assert c.physical(0, 3) == (first[0], 3)    # old tail kept
+    assert c.physical(0, 4) == (new[0], 0)
+    assert c.physical(0, 12) == (new[2], 0)
+    c.check_invariants()
+
+
+def test_truncate_basic_boundaries_and_errors():
+    c = PagedKVCache(num_pages=8, page_size=4, max_slots=2,
+                     max_pages_per_seq=4)
+    c.alloc(0)
+    pages = c.append(0, 10)                     # 3 pages
+    # within the tail page: length shrinks, no page freed
+    assert c.truncate(0, 9) == []
+    assert c.seq_len(0) == 9 and c.owned_pages(0) == pages
+    # crossing page boundaries: tail pages freed, table rows scratched
+    assert c.truncate(0, 4) == pages[1:]
+    assert c.owned_pages(0) == pages[:1]
+    assert (c.table[0, 1:] == c.SCRATCH).all()
+    c.check_invariants()
+    # to zero: slot stays active with no pages (like a fresh alloc)
+    assert c.truncate(0, 0) == pages[:1]
+    assert c.is_active(0) and c.used_pages == 0 and c.seq_len(0) == 0
+    c.check_invariants()
+    c.append(0, 3)                              # still usable afterwards
+    with pytest.raises(ValueError):
+        c.truncate(0, 4)                        # beyond current length
+    with pytest.raises(ValueError):
+        c.truncate(0, -1)
+    with pytest.raises(ValueError):
+        c.truncate(1, 0)                        # inactive slot
+    c.check_invariants()
+
+
+def test_truncate_shared_pages_decref_only():
+    """Truncating over pages shared with another slot (prefix hit) only
+    drops this slot's reference -- the sharer keeps its KV."""
+    c = PagedKVCache(num_pages=8, page_size=4, max_slots=2,
+                     max_pages_per_seq=4)
+    c.alloc(0)
+    pages = c.append(0, 6)                      # 2 pages, tail half-full
+    c.alloc(1)
+    c.share_pages(1, pages, 6)
+    assert c.refcount(pages[1]) == 2
+    assert c.truncate(1, 4) == [pages[1]]
+    assert c.refcount(pages[1]) == 1            # still resident for slot 0
+    assert c.owned_pages(0) == pages and c.owned_pages(1) == pages[:1]
+    assert c.seq_len(0) == 6
+    c.check_invariants()
+
+
+def test_truncate_right_after_cow_cancels_dead_debt():
+    """Append-K onto a shared tail COWs it; rolling the speculative rows
+    back before the device copy ran must keep the debt only while its
+    destination page is still owned -- a cancelled dst went back to the
+    free list and may be reallocated at any moment."""
+    c = PagedKVCache(num_pages=8, page_size=4, max_slots=2,
+                     max_pages_per_seq=4)
+    c.alloc(0)
+    pages = c.append(0, 6)
+    c.alloc(1)
+    c.share_pages(1, pages, 6)
+    fresh = c.append(1, 5)                      # COW tail + 1 new page
+    assert len(fresh) == 1 and len(c.cow_pending) == 1
+    src, dst = c.cow_pending[0]
+    assert src == pages[1] and dst == c.owned_pages(1)[1]
+    # rollback that keeps the COW'd tail page: the debt must survive
+    # (rows 4..5 live on the copy)
+    assert c.truncate(1, 6) == fresh
+    assert c.cow_pending == [(src, dst)]
+    c.check_invariants()
+    # rollback past the COW'd page: the debt dies with it
+    assert c.truncate(1, 4) == [dst]
+    assert c.cow_pending == []
+    assert c.refcount(src) == 1 and c.refcount(dst) == 0
+    c.check_invariants()
+
+
 def test_mapping_roundtrip_random_lengths():
     rng = np.random.default_rng(0)
     c = PagedKVCache(num_pages=40, page_size=8, max_slots=4,
@@ -137,14 +224,13 @@ def test_random_trace_no_leak_no_double_own(seed):
     extern: dict = {}                           # page -> external holds
     for _ in range(400):
         op = rng.choice(["alloc", "append", "free", "release", "adopt",
-                         "share", "hold", "unhold"])
+                         "share", "hold", "unhold", "spec"])
         slot = int(rng.integers(0, c.max_slots))
         try:
             if op == "alloc":
                 c.alloc(slot)
             elif op == "append":
                 c.append(slot, int(rng.integers(1, 6)))
-                c.cow_pending.clear()           # "device copy" applied
             elif op == "release":
                 c.release_pages(slot)
             elif op == "adopt":
@@ -178,11 +264,27 @@ def test_random_trace_no_leak_no_double_own(seed):
                     extern[page] -= 1
                     if not extern[page]:
                         del extern[page]
+            elif op == "spec":
+                # speculative verify shape: append K rows (may COW a
+                # shared tail) then roll back to an arbitrary accept
+                # point BEFORE the COW device copy ran -- truncate must
+                # cancel exactly the debts whose dst page it freed
+                cur = c.seq_len(slot)
+                c.append(slot, int(rng.integers(1, 6)))
+                c.truncate(slot, int(rng.integers(0, cur + 1))
+                           if rng.integers(0, 2) else cur)
             else:
                 c.free(slot)
         except (ValueError, OutOfPages):
             pass                                # rejected ops are no-ops
         c.check_invariants(extern_refs=extern)
+        # every surviving COW debt must point at live pages: the src is
+        # still held by a sharer, the dst is still owned by the grower
+        free = set(c._free)
+        for s, d in c.cow_pending:
+            assert c.refcount(s) > 0 and c.refcount(d) > 0
+            assert s not in free and d not in free
+        c.cow_pending.clear()                   # "device copy" applied
     for slot in range(c.max_slots):
         if c.is_active(slot):
             c.free(slot)

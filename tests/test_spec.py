@@ -1,0 +1,414 @@
+"""Speculative decoding (serving/spec.py + the EngineCore verify path).
+
+Unit level: the prompt-lookup drafter (longest-suffix matching,
+incremental indexing, adaptive K from the accept-rate EMA) and the two
+acceptance samplers as pure functions -- greedy acceptance IS the
+argmax-prefix match, residual rejection sampling is seeded-deterministic
+with the exact target marginal, and K=0 degenerates bit-for-bit into
+``core.sample_token``.
+
+System level: greedy token streams bit-identical with speculation on vs
+off -- solo, under pool pressure (swap and recompute preemption), over
+shared-prefix COW pages, and through the chaos soak with the
+``spec_verify`` fault site armed -- plus replayable sampled acceptance,
+batch-composition invariance, overhead-free ``spec_mode="off"`` (the
+verify fn is never traced or launched), and the ``engine_spec_*``
+metrics/flight-recorder surface.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ParallelConfig, ServeConfig, get_model_config, \
+    reduce_for_smoke
+from repro.serving.core import EngineCore, sample_token
+from repro.serving.faults import FaultInjector, LogitError
+from repro.serving.scheduler import Request, SamplingParams
+from repro.serving.spec import (PromptLookupDrafter, verify_greedy,
+                                verify_residual)
+
+
+# ---------------------------------------------------------------------------
+# unit: prompt-lookup drafter
+# ---------------------------------------------------------------------------
+
+def _req(prompt, generated=(), rid=0):
+    r = Request(id=rid, prompt=np.asarray(prompt, np.int32),
+                sampling=SamplingParams(max_new_tokens=64))
+    r.generated = list(generated)
+    return r
+
+
+def test_drafter_proposes_continuation_of_previous_occurrence():
+    d = PromptLookupDrafter(max_tokens=4, ngram_max=3, ngram_min=1)
+    # ... 7 8 9 1 2 3 | suffix [1 2 3] matched earlier -> drafts [4 5 6 7]
+    out = d.propose(_req([1, 2, 3, 4, 5, 6, 7, 8, 9, 1, 2, 3]))
+    assert out == [4, 5, 6, 7]
+    # most recent previous occurrence supplies the draft (end 5, not 2)
+    d2 = PromptLookupDrafter(max_tokens=2, ngram_max=3, ngram_min=1)
+    assert d2.propose(_req([5, 2, 9, 4, 2, 7, 8, 2])) == [7, 8]  # 1-gram "2"
+    # no repetition at all -> nothing to draft
+    d3 = PromptLookupDrafter(max_tokens=4)
+    assert d3.propose(_req([1, 2, 3, 4, 5])) == []
+
+
+def test_drafter_index_is_incremental_and_generation_aware():
+    d = PromptLookupDrafter(max_tokens=4, ngram_max=2, ngram_min=1)
+    r = _req([3, 1, 4], generated=[])
+    assert d.propose(r) == []
+    # generated tokens join the searchable context between calls
+    r.generated = [1, 5, 9, 3, 1]
+    out = d.propose(r)
+    assert out == [4, 1, 5, 9]          # 2-gram [3, 1] seen at prompt start
+    assert d._indexed[0] == 8
+
+
+def test_drafter_adaptive_k_ema_and_forget():
+    d = PromptLookupDrafter(max_tokens=4, ema_alpha=0.5)
+    assert d.budget(0) == 4             # optimistic before any feedback
+    d.observe(0, 4, 0)
+    assert d.budget(0) == 1             # total rejection -> minimum K
+    d.observe(0, 4, 4)                  # recovery pulls the EMA back up
+    assert d.budget(0) == 2
+    d.observe(0, 4, 4)
+    assert d.budget(0) == 3
+    d.forget(0)
+    assert d.budget(0) == 4
+    # ema_alpha=0 disables adaptation entirely
+    d0 = PromptLookupDrafter(max_tokens=4, ema_alpha=0.0)
+    d0.observe(0, 4, 0)
+    assert d0.budget(0) == 4
+
+
+def test_drafter_validation():
+    with pytest.raises(ValueError, match="max_tokens"):
+        PromptLookupDrafter(max_tokens=0)
+    with pytest.raises(ValueError, match="ngram"):
+        PromptLookupDrafter(max_tokens=2, ngram_min=3, ngram_max=2)
+    with pytest.raises(ValueError, match="ema_alpha"):
+        PromptLookupDrafter(max_tokens=2, ema_alpha=1.5)
+
+
+# ---------------------------------------------------------------------------
+# unit: greedy acceptance == argmax prefix match
+# ---------------------------------------------------------------------------
+
+def test_verify_greedy_accepts_exact_argmax_prefix():
+    argm = [7, 8, 9, 3, 5]
+    # full match: all 4 drafts + the bonus token from the last row
+    toks, acc = verify_greedy([7, 8, 9, 3], argm, budget=64)
+    assert (toks, acc) == ([7, 8, 9, 3, 5], 4)
+    # mismatch at position 2: the emitted token IS the correction
+    toks, acc = verify_greedy([7, 8, 1, 3], argm, budget=64)
+    assert (toks, acc) == ([7, 8, 9], 2)
+    # immediate mismatch degenerates to one (plain-decode) token
+    toks, acc = verify_greedy([1, 8], argm, budget=64)
+    assert (toks, acc) == ([7], 0)
+    # K=0: just the bonus token -- the plain decode step
+    assert verify_greedy([], argm, budget=64) == ([7], 0)
+    # stop token ends acceptance without a bonus
+    toks, acc = verify_greedy([7, 8, 9], argm, stop_ids=(8,), budget=64)
+    assert (toks, acc) == ([7, 8], 2)
+    # remaining-token budget caps the run
+    toks, acc = verify_greedy([7, 8, 9, 3], argm, budget=2)
+    assert (toks, acc) == ([7, 8], 2)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_verify_greedy_prefix_property(seed):
+    """For random drafts vs argmax rows: accepted == longest common
+    prefix, and the emitted tokens are exactly the argmax stream."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(0, 5))
+    argm = rng.integers(0, 4, size=k + 1)
+    drafts = rng.integers(0, 4, size=k)
+    toks, acc = verify_greedy(drafts, argm, budget=64)
+    prefix = 0
+    while prefix < k and drafts[prefix] == argm[prefix]:
+        prefix += 1
+    assert acc == prefix
+    assert toks == [int(t) for t in argm[:min(prefix + 1, k + 1)]]
+
+
+def test_verify_guard_checks_only_consumed_rows():
+    argm = [7, 8, 9]
+    ok = np.array([True, False, True])
+    # mismatch at row 0 never consumes row 1 -> the bad row is ignored
+    toks, acc = verify_greedy([1, 8], argm, budget=64, row_ok=ok)
+    assert (toks, acc) == ([7], 0)
+    # accepting through row 1 trips the guard
+    with pytest.raises(LogitError):
+        verify_greedy([7, 8], argm, budget=64, row_ok=ok)
+    with pytest.raises(LogitError):
+        verify_residual([7], np.zeros((2, 4), np.float32), seed=0, n0=0,
+                        temperature=1.0, budget=64,
+                        row_ok=np.array([False, True]))
+
+
+# ---------------------------------------------------------------------------
+# unit: residual rejection sampling
+# ---------------------------------------------------------------------------
+
+def test_verify_residual_seeded_deterministic():
+    rng = np.random.default_rng(0)
+    rows = rng.normal(size=(5, 16)).astype(np.float32)
+    drafts = [3, 11, 7, 2]
+    a = verify_residual(drafts, rows, seed=9, n0=4, temperature=0.7,
+                        top_k=8, budget=64)
+    b = verify_residual(drafts, rows, seed=9, n0=4, temperature=0.7,
+                        top_k=8, budget=64)
+    assert a == b                       # replayable from (seed, n0) alone
+    assert 1 <= len(a[0]) <= 5 and 0 <= a[1] <= 4
+
+
+def test_verify_residual_k0_bit_identical_to_sample_token():
+    """A draft-less verify step must sample exactly like the plain
+    decode path: same key (fold_in(PRNGKey(seed), n)), same processing,
+    same bits."""
+    rng = np.random.default_rng(1)
+    row = rng.normal(size=(32,)).astype(np.float32)
+    for n0, seed, temp, top_k in [(0, 0, 1.0, 0), (7, 3, 0.6, 5),
+                                  (2, 11, 1.3, 0)]:
+        toks, acc = verify_residual([], [row], seed=seed, n0=n0,
+                                    temperature=temp, top_k=top_k,
+                                    budget=64)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), n0)
+        want = int(np.asarray(sample_token(
+            jnp.atleast_2d(jnp.asarray(row)), key, temperature=temp,
+            top_k=top_k)).ravel()[0])
+        assert (toks, acc) == ([want], 0)
+
+
+def test_verify_residual_marginal_matches_target():
+    """Accept-or-residual over a point-mass drafter must emit each token
+    with its target probability p(t) -- including the drafted token.
+    Empirical check over many token indices (each index draws fresh
+    counter-based keys)."""
+    logits = np.array([1.5, 0.5, -0.5, 0.0], np.float32)
+    p = np.asarray(jax.nn.softmax(jnp.asarray(logits)))
+    draft = 1
+    counts = np.zeros(4)
+    trials = 1200
+    for n in range(trials):
+        toks, _ = verify_residual([draft], [logits, logits], seed=5, n0=n,
+                                  temperature=1.0, budget=64)
+        counts[toks[0]] += 1
+    freq = counts / trials
+    np.testing.assert_allclose(freq, p, atol=0.06)
+
+
+# ---------------------------------------------------------------------------
+# system fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built():
+    from repro.models import build_model
+    cfg = reduce_for_smoke(get_model_config("gemma2-2b"))
+    model = build_model(cfg, ParallelConfig(remat="none"))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, cfg
+
+
+def _serve(**kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_seq_len", 96)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("prefill_chunk", 16)
+    kw.setdefault("debug_invariants", True)
+    return ServeConfig(**kw)
+
+
+def _spec_on(serve, **kw):
+    kw.setdefault("spec_mode", "lookup")
+    kw.setdefault("spec_tokens", 4)
+    return dataclasses.replace(serve, **kw)
+
+
+def _prompts(cfg, repetitive=True, n=3, seed=0):
+    """Lookup-friendly prompts (tiled motif) or unrepetitive ones."""
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab_size
+    out = []
+    for i in range(n):
+        if repetitive:
+            motif = rng.integers(1, v, size=5).tolist()
+            out.append(np.array((motif * 8)[:20 + 4 * i], np.int32))
+        else:
+            out.append(rng.integers(1, v, size=12 + 3 * i).astype(np.int32))
+    return out
+
+
+def _run(built, serve, prompts, *, injector=None, temps=None, seed=11,
+         max_new=16, waves=1):
+    """Drive an EngineCore to idle; returns ({rid: [tokens]}, core).
+    ``waves > 1`` resubmits the same prompts after draining (prefix-
+    cache warm path)."""
+    model, params, cfg = built
+    core = EngineCore(model, params, cfg, serve, injector=injector)
+    outs = {}
+    rid = 0
+    for _ in range(waves):
+        for i, p in enumerate(prompts):
+            sp = SamplingParams(
+                max_new_tokens=max_new,
+                temperature=0.0 if temps is None else temps[i],
+                seed=seed + i)
+            core.add_request(p, sp, request_id=rid)
+            outs[rid] = []
+            rid += 1
+        while core.has_work:
+            for ev in core.step():
+                if ev.kind == "token":
+                    outs[ev.request_id].append(ev.token)
+    core.mgr.check_invariants(
+        extern_refs=core.prefix.page_refs() if core.prefix else None)
+    return outs, core
+
+
+# ---------------------------------------------------------------------------
+# system: bit-identity, degeneration, invariance
+# ---------------------------------------------------------------------------
+
+def test_spec_greedy_bit_identical_and_fewer_steps(built):
+    prompts = _prompts(built[2])
+    off, core_off = _run(built, _serve(), prompts)
+    on, core_on = _run(built, _spec_on(_serve()), prompts)
+    assert on == off                    # greedy stream invariant to spec
+    st = core_on.stats()["spec"]
+    assert st["drafted"] > 0 and st["accept_rate"] > 0.3
+    assert st["verify_launches"] > 0
+    # accepted runs collapse steps: same tokens, fewer iterations
+    assert core_on.stats()["steps"] < core_off.stats()["steps"]
+    # the off engine provably never touched the verify path
+    assert core_off.spec_launches == 0
+    assert core_off.spec_trace_count == 0
+    assert "spec" not in core_off.stats()
+
+
+def test_spec_verify_fault_degrades_to_k0_bit_identical(built):
+    """spec_verify armed every step -> every verify launch carries zero
+    drafts; tokens still bit-identical to the plain path."""
+    prompts = _prompts(built[2])
+    off, _ = _run(built, _serve(), prompts)
+    inj = FaultInjector(seed=0).arm("spec_verify", every=1)
+    on, core = _run(built, _spec_on(_serve()), prompts, injector=inj)
+    assert on == off
+    st = core.stats()["spec"]
+    assert st["drafted"] == 0 and st["verify_launches"] > 0
+
+
+def test_spec_sampled_replay_and_batch_composition_invariance(built):
+    prompts = _prompts(built[2])
+    temps = [0.8, 0.9, 0.7]
+    a, _ = _run(built, _spec_on(_serve()), prompts, temps=temps)
+    b, _ = _run(built, _spec_on(_serve()), prompts, temps=temps)
+    assert a == b                       # counter-based RNG: replayable
+    solo, _ = _run(built, _spec_on(_serve()), prompts[:1], temps=temps[:1])
+    assert solo[0] == a[0]              # co-tenants change nothing
+
+
+def test_spec_greedy_bit_identical_under_pressure(built):
+    """Preemption mid-speculation: grown-but-unwritten rows are dropped
+    with the victim's pages and the resume path never sees them."""
+    prompts = _prompts(built[2])
+    for policy in ("swap", "recompute"):
+        serve = _serve(num_pages=8, preempt_policy=policy)
+        off, _ = _run(built, serve, prompts)
+        on, core = _run(built, _spec_on(serve), prompts)
+        assert on == off, policy
+        assert core.stats()["pressure"]["preemptions"] > 0, policy
+
+
+def test_spec_greedy_bit_identical_with_shared_prefix_cow(built):
+    """Two waves over a shared system prompt: wave 2 decodes (and
+    speculates) off prefix-cache hits, COW-protecting shared tail pages
+    that the multi-token append must copy before writing."""
+    cfg = built[2]
+    rng = np.random.default_rng(4)
+    sysp = rng.integers(1, cfg.vocab_size, size=32).tolist()
+    motif = rng.integers(1, cfg.vocab_size, size=5).tolist()
+    prompts = [np.array(sysp + (motif * 5)[:14], np.int32),
+               np.array(sysp + (motif * 4)[:10], np.int32)]
+    serve = _serve(max_batch=2, prefix_cache=True)
+    off, _ = _run(built, serve, prompts, waves=2)
+    on, core = _run(built, _spec_on(serve), prompts, waves=2)
+    assert on == off
+    assert core.stats()["prefix"]["hits"] > 0
+    assert core.stats()["spec"]["accepted"] > 0
+
+
+def test_spec_chaos_soak_survivors_bit_identical(built):
+    """Invariants every step under a fault storm covering the new
+    spec_verify site plus page_alloc/sample/decode_launch: quarantined
+    requests fail cleanly, survivors match the fault-free plain run bit
+    for bit, nothing leaks."""
+    prompts = _prompts(built[2], n=4, seed=2)
+    ref, _ = _run(built, _serve(max_batch=3), prompts, max_new=12)
+    inj = (FaultInjector(seed=5)
+           .arm("spec_verify", every=4)
+           .arm("decode_launch", nth=(3,))
+           .arm("page_alloc", nth=(6,))
+           .arm("sample", nth=(9,)))
+    on, core = _run(built, _spec_on(_serve(max_batch=3)), prompts,
+                    injector=inj, max_new=12)
+    survivors = {r: t for r, t in on.items() if len(t) == 12}
+    assert survivors and all(ref[r] == t for r, t in survivors.items())
+    assert core.injector.total_fired > 0
+    assert core.stats()["active_slots"] == 0
+    assert core.mgr.used_pages == (core.prefix.cached_pages
+                                   if core.prefix else 0)
+
+
+def test_spec_stop_token_inside_accepted_run(built):
+    """A stop token accepted mid-run ends the request exactly where the
+    plain path would: no token after the stop, KV rolled back to the
+    invariant length."""
+    prompts = _prompts(built[2], n=1)
+    base, _ = _run(built, _serve(max_batch=1), prompts, max_new=16)
+    stop = base[0][5]                   # force a stop mid-generation
+    def with_stop(serve):
+        outs = {}
+        model, params, cfg = built
+        core = EngineCore(model, params, cfg, serve)
+        core.add_request(prompts[0], SamplingParams(
+            max_new_tokens=16, stop_token_ids=(stop,)), request_id=0)
+        outs[0] = []
+        while core.has_work:
+            for ev in core.step():
+                if ev.kind == "token":
+                    outs[0].append(ev.token)
+        return outs
+    off = with_stop(_serve(max_batch=1))
+    on = with_stop(_spec_on(_serve(max_batch=1)))
+    assert on == off and on[0][-1] == stop
+    assert len(on[0]) <= 6 + 1
+
+
+def test_spec_metrics_and_flight_recorder_surface(built):
+    prompts = _prompts(built[2])
+    _, core = _run(built, _spec_on(_serve()), prompts)
+    snap = core.metrics.snapshot()
+    assert snap["engine_spec_drafted_total"]["window"] > 0
+    assert snap["engine_spec_accepted_total"]["window"] > 0
+    assert snap["engine_spec_accept_rate"]["count"] > 0
+    assert snap["engine_spec_run_length"]["count"] > 0
+    # the verify launch is its own step phase, in the phase histograms
+    # and the flight-recorder ring / Chrome trace
+    assert "engine_phase_verify_seconds" in snap
+    assert any("verify" in r["phases"] for r in core.flight.records)
+    names = {e["name"] for e in core.chrome_trace()["traceEvents"]
+             if e.get("ph") == "X"}
+    assert "verify" in names
+
+
+def test_spec_config_validation(built):
+    model, params, cfg = built
+    with pytest.raises(ValueError, match="spec_mode"):
+        EngineCore(model, params, cfg, _serve(spec_mode="draft-model"))
+    with pytest.raises(ValueError, match="spec_tokens"):
+        EngineCore(model, params, cfg,
+                   _serve(spec_mode="lookup", spec_tokens=0))
