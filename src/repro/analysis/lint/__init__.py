@@ -1,0 +1,19 @@
+"""repro-lint: stdlib-ast static analysis encoding the serving
+engine's observed bug taxonomy (see :mod:`repro.analysis.lint.rules`).
+
+    PYTHONPATH=src python -m repro.analysis.lint src/ tests/
+"""
+from repro.analysis.lint.framework import (Finding, LintEngine,
+                                           LintResult, ModuleContext,
+                                           Rule)
+from repro.analysis.lint.report import render_json, render_text
+from repro.analysis.lint.rules import ALL_RULES, RULE_INDEX, default_rules
+
+__all__ = ["Finding", "LintEngine", "LintResult", "ModuleContext",
+           "Rule", "ALL_RULES", "RULE_INDEX", "default_rules",
+           "render_json", "render_text", "lint_paths"]
+
+
+def lint_paths(*paths: str) -> LintResult:
+    """Convenience: run the default rule set over ``paths``."""
+    return LintEngine(default_rules()).run(list(paths))

@@ -1,0 +1,716 @@
+"""The repro-lint rule catalogue: the engine's observed bug taxonomy.
+
+Each rule encodes a bug class this repo has actually shipped (and fixed)
+or a guarantee its equivalence oracles depend on:
+
+========================  =========  =====================================
+rule                      code       bug class / guarantee
+========================  =========  =====================================
+unresolvable-except       REPRO001   PR 6: ``except OutOfPages:`` with the
+                                     name never imported -- a latent
+                                     NameError on a rarely-taken path
+raw-wall-clock            REPRO002   PR 8: stray ``time.perf_counter()``
+                                     in ``EngineCore.step`` corrupting
+                                     phase telemetry; all engine timing
+                                     must ride the injectable clock
+mutable-default           REPRO003   PR 2: shared mutable dataclass /
+                                     keyword defaults
+trace-impurity            REPRO004   host-side effects inside jit/
+                                     shard_map/Pallas-traced functions
+                                     break bit-exactness + trace
+                                     neutrality
+retrace-hazard            REPRO005   jit shapes derived from per-request
+                                     values (prompt length) retrace per
+                                     request instead of per config
+metric-name-hygiene       REPRO006   registry names must follow the
+                                     ``engine_*|kv_*|pressure_*|prefix_*``
+                                     + ``_total``/``_seconds`` conventions
+                                     and be created at exactly one site
+silent-drop               REPRO007   PR 6: bounded deques that evict
+                                     without counting (orphan events)
+swallowed-exception       REPRO008   bare ``except:`` / broad handlers
+                                     that swallow errors in engine code
+========================  =========  =====================================
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.lint.framework import (Finding, ModuleContext, Rule,
+                                           dotted_name)
+
+__all__ = ["ALL_RULES", "default_rules", "RULE_INDEX"]
+
+_CLOCK_ATTRS = {"time", "perf_counter", "perf_counter_ns", "monotonic",
+                "monotonic_ns", "process_time", "process_time_ns",
+                "time_ns"}
+
+
+# ---------------------------------------------------------------------------
+# REPRO001 -- unresolvable-except
+# ---------------------------------------------------------------------------
+
+class UnresolvableExcept(Rule):
+    name = "unresolvable-except"
+    code = "REPRO001"
+    description = ("every name in an except clause must resolve to an "
+                   "import or binding visible in the module (PR 6 "
+                   "shipped a never-imported OutOfPages handler: a "
+                   "latent NameError on the rarely-taken path)")
+    node_types = (ast.ExceptHandler,)
+
+    def visit(self, node: ast.ExceptHandler, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        if node.type is None:
+            return                      # bare except: REPRO008's domain
+        roots: List[ast.Name] = []
+        exprs = (node.type.elts if isinstance(node.type, ast.Tuple)
+                 else [node.type])
+        for expr in exprs:
+            while isinstance(expr, ast.Attribute):
+                expr = expr.value
+            if isinstance(expr, ast.Name):
+                roots.append(expr)
+        known = ctx.module_names
+        for root in roots:
+            if root.id in known:
+                continue
+            if any(root.id in ctx.scope_locals(s)
+                   for s in ctx.enclosing_scopes(node)):
+                continue
+            yield self.finding(
+                ctx, root,
+                f"name {root.id!r} in except clause resolves to no "
+                f"import or binding in this module -- the handler "
+                f"raises NameError the first time the exception "
+                f"actually fires")
+
+
+# ---------------------------------------------------------------------------
+# REPRO002 -- raw-wall-clock
+# ---------------------------------------------------------------------------
+
+class RawWallClock(Rule):
+    name = "raw-wall-clock"
+    code = "REPRO002"
+    description = ("no direct time.time/perf_counter/monotonic calls in "
+                   "engine/launch/training code: route timing through an "
+                   "injectable clock attribute (EngineCore._clock) so "
+                   "frozen-clock tests cover every timing path (PR 8's "
+                   "bug class)")
+    paths = ("repro/serving/", "repro/launch/", "repro/training/")
+    node_types = (ast.Call,)
+    default_config = {"clock_attrs": ("_clock", "clock")}
+
+    def start_module(self, ctx: ModuleContext) -> None:
+        imports = ctx.imported_modules()
+        self._time_aliases = {local for local, mod in imports.items()
+                              if mod == "time"}
+        self._from_time = {local for local, mod in imports.items()
+                           if mod.startswith("time.")
+                           and mod.split(".", 1)[1] in _CLOCK_ATTRS}
+
+    def visit(self, node: ast.Call, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        func = node.func
+        hit: Optional[str] = None
+        if isinstance(func, ast.Attribute) \
+                and isinstance(func.value, ast.Name) \
+                and func.value.id in self._time_aliases \
+                and func.attr in _CLOCK_ATTRS:
+            hit = f"{func.value.id}.{func.attr}"
+        elif isinstance(func, ast.Name) and func.id in self._from_time:
+            hit = func.id
+        if hit is not None:
+            attrs = ", ".join(f"self.{a}"
+                              for a in self.config["clock_attrs"])
+            yield self.finding(
+                ctx, node,
+                f"direct wall-clock read {hit}() -- route timing "
+                f"through an injectable clock attribute ({attrs}) so "
+                f"frozen-clock tests observe it; bind the clock "
+                f"function once (e.g. `clock or time.monotonic`) "
+                f"instead of calling the module directly")
+
+
+# ---------------------------------------------------------------------------
+# REPRO003 -- mutable-default
+# ---------------------------------------------------------------------------
+
+_MUTABLE_FACTORIES = {"list", "dict", "set", "deque", "defaultdict",
+                      "Counter", "OrderedDict", "bytearray"}
+
+
+def _mutable_default(node: Optional[ast.AST]) -> Optional[str]:
+    """Describe the mutable default, or None when the value is safe."""
+    if node is None:
+        return None
+    if isinstance(node, ast.List):
+        return "[]" if not node.elts else "a list literal"
+    if isinstance(node, ast.Dict):
+        return "{}" if not node.keys else "a dict literal"
+    if isinstance(node, ast.Set):
+        return "a set literal"
+    if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp)):
+        return "a comprehension"
+    if isinstance(node, ast.Call):
+        dn = dotted_name(node.func)
+        if dn is not None and dn.split(".")[-1] in _MUTABLE_FACTORIES:
+            return f"{dn}()"
+    return None
+
+
+def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dn = dotted_name(target)
+        if dn is not None and dn.split(".")[-1] == "dataclass":
+            return True
+    return False
+
+
+class MutableDefault(Rule):
+    name = "mutable-default"
+    code = "REPRO003"
+    description = ("keyword defaults and dataclass field defaults must "
+                   "not be []/{}/set() or other shared mutable "
+                   "instances (PR 2's repo-wide audit): one instance is "
+                   "shared by every call/instance")
+    node_types = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                  ast.ClassDef)
+
+    def visit(self, node: ast.AST, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        if isinstance(node, ast.ClassDef):
+            if not _is_dataclass_decorated(node):
+                return
+            for stmt in node.body:
+                value = None
+                if isinstance(stmt, ast.AnnAssign):
+                    value = stmt.value
+                elif isinstance(stmt, ast.Assign):
+                    value = stmt.value
+                desc = _mutable_default(value)
+                if desc:
+                    yield self.finding(
+                        ctx, stmt,
+                        f"dataclass field default is {desc}: one "
+                        f"instance is shared by every {node.name} -- "
+                        f"use field(default_factory=...)")
+            return
+        args = node.args
+        # defaults align with the *last* len(defaults) positional params
+        pos = (list(args.posonlyargs) + list(args.args)
+               if hasattr(args, "posonlyargs") else list(args.args))
+        for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                                args.defaults):
+            desc = _mutable_default(default)
+            if desc:
+                yield self.finding(
+                    ctx, default,
+                    f"default for parameter {arg.arg!r} is {desc}: "
+                    f"one instance is shared across calls -- default "
+                    f"to None (or use field(default_factory=...))")
+        for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+            desc = _mutable_default(default)
+            if desc:
+                yield self.finding(
+                    ctx, default,
+                    f"default for parameter {arg.arg!r} is {desc}: "
+                    f"one instance is shared across calls -- default "
+                    f"to None (or use field(default_factory=...))")
+
+
+# ---------------------------------------------------------------------------
+# REPRO004 -- trace-impurity
+# ---------------------------------------------------------------------------
+
+_TRACE_ENTRY_CALLS = {"jit", "pallas_call", "shard_map", "pjit"}
+_HOST_RNG_ROOTS = {"random"}
+
+
+def _is_trace_wrapper(expr: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``pl.pallas_call`` / ``shard_map`` (bare
+    or behind ``functools.partial``)."""
+    if isinstance(expr, ast.Call):
+        dn = dotted_name(expr.func)
+        if dn is not None and dn.split(".")[-1] == "partial":
+            return any(_is_trace_wrapper(a) for a in expr.args)
+        return _is_trace_wrapper(expr.func)
+    dn = dotted_name(expr)
+    return dn is not None and dn.split(".")[-1] in _TRACE_ENTRY_CALLS
+
+
+class TraceImpurity(Rule):
+    name = "trace-impurity"
+    code = "REPRO004"
+    description = ("functions traced by jax.jit/shard_map/pallas_call "
+                   "must be pure functions of their operands: no "
+                   "attribute mutation, print, host clocks, host RNG, "
+                   "metrics-registry touches, or branching on traced "
+                   "array truthiness -- impurity silently breaks the "
+                   "bit-exactness and trace-neutrality oracles")
+    node_types = (ast.Module,)           # whole-module analysis
+
+    def start_module(self, ctx: ModuleContext) -> None:
+        imports = ctx.imported_modules()
+        self._time_aliases = {local for local, mod in imports.items()
+                              if mod == "time"}
+        self._array_roots = {local for local, mod in imports.items()
+                             if mod in ("jax.numpy", "jax")}
+        self._array_roots |= {"jnp", "jax"}
+
+    # -- entry-point discovery ----------------------------------------
+    def _traced_roots(self, ctx: ModuleContext) -> List[ast.AST]:
+        roots: List[ast.AST] = []
+        defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, []).append(node)
+        seeds: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_trace_wrapper(d) for d in node.decorator_list):
+                    roots.append(node)
+            elif isinstance(node, ast.Call) \
+                    and _is_trace_wrapper(node.func):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        seeds.add(arg.id)
+                    elif isinstance(arg, ast.Lambda):
+                        roots.append(arg)
+            elif isinstance(node, (ast.GeneratorExp, ast.ListComp)):
+                # the `tuple(jit(f) for f in (a, b, c))` idiom: every
+                # Name in the iterated tuple is a traced function
+                tgt = {n.id for gen in node.generators
+                       for n in ast.walk(gen.target)
+                       if isinstance(n, ast.Name)}
+                jitted_target = any(
+                    isinstance(c, ast.Call) and _is_trace_wrapper(c.func)
+                    and any(isinstance(a, ast.Name) and a.id in tgt
+                            for a in c.args)
+                    for c in ast.walk(node.elt))
+                if jitted_target:
+                    for gen in node.generators:
+                        if isinstance(gen.iter, (ast.Tuple, ast.List)):
+                            seeds.update(e.id for e in gen.iter.elts
+                                         if isinstance(e, ast.Name))
+        # resolve seeds + transitive module-local callees
+        worklist = [d for name in seeds for d in defs.get(name, ())]
+        roots.extend(worklist)
+        seen = {id(r) for r in roots}
+        while worklist:
+            fn = worklist.pop()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name):
+                    for d in defs.get(node.func.id, ()):
+                        if id(d) not in seen:
+                            seen.add(id(d))
+                            roots.append(d)
+                            worklist.append(d)
+        return roots
+
+    # -- impurity checks ----------------------------------------------
+    def _check_body(self, fn: ast.AST, ctx: ModuleContext
+                    ) -> Iterable[Finding]:
+        label = getattr(fn, "name", "<lambda>")
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute):
+                        dn = dotted_name(t) or f"<expr>.{t.attr}"
+                        yield self.finding(
+                            ctx, node,
+                            f"traced function {label!r} mutates "
+                            f"attribute state {dn!r}: host-side "
+                            f"effects run at trace time, not per call "
+                            f"-- hoist out of the traced region")
+            elif isinstance(node, ast.Call):
+                dn = dotted_name(node.func)
+                if dn is None:
+                    continue
+                parts = dn.split(".")
+                if dn == "print":
+                    yield self.finding(
+                        ctx, node,
+                        f"print() inside traced function {label!r}: "
+                        f"runs at trace time only (use jax.debug.print "
+                        f"for per-call output)")
+                elif parts[0] in self._time_aliases \
+                        and parts[-1] in _CLOCK_ATTRS:
+                    yield self.finding(
+                        ctx, node,
+                        f"host clock read {dn}() inside traced "
+                        f"function {label!r}: evaluates once at trace "
+                        f"time -- timing belongs outside the jit "
+                        f"boundary")
+                elif (parts[0] in _HOST_RNG_ROOTS
+                      or (len(parts) >= 2 and parts[0] in ("np", "numpy")
+                          and parts[1] == "random")):
+                    yield self.finding(
+                        ctx, node,
+                        f"host RNG {dn}() inside traced function "
+                        f"{label!r}: draws once at trace time and "
+                        f"bakes the value into the trace -- use "
+                        f"jax.random with an explicit key")
+                elif "metrics" in parts[:-1] or parts[-1] == "metrics":
+                    yield self.finding(
+                        ctx, node,
+                        f"metrics-registry touch {dn!r} inside traced "
+                        f"function {label!r}: telemetry must stay "
+                        f"host-side (trace-neutrality oracle)")
+            elif isinstance(node, (ast.If, ast.While)):
+                for sub in ast.walk(node.test):
+                    if isinstance(sub, ast.Call):
+                        sdn = dotted_name(sub.func)
+                        if sdn and sdn.split(".")[0] in self._array_roots:
+                            yield self.finding(
+                                ctx, node,
+                                f"traced function {label!r} branches "
+                                f"on array truthiness ({sdn}(...)): "
+                                f"raises TracerBoolConversionError "
+                                f"under jit -- use lax.cond/jnp.where",
+                                line=node.lineno)
+                            break
+
+    def visit(self, node: ast.Module, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        emitted: Set[Tuple[int, str]] = set()
+        for fn in self._traced_roots(ctx):
+            for f in self._check_body(fn, ctx):
+                key = (f.line, f.message)
+                if key not in emitted:
+                    emitted.add(key)
+                    yield f
+
+
+# ---------------------------------------------------------------------------
+# REPRO005 -- retrace-hazard
+# ---------------------------------------------------------------------------
+
+class RetraceHazard(Rule):
+    name = "retrace-hazard"
+    code = "REPRO005"
+    description = ("arguments to jitted callables whose shape derives "
+                   "from per-request values (prompt length, token "
+                   "counts) retrace per request; shapes must be bounded "
+                   "by config (chunk size, power-of-two widths)")
+    node_types = (ast.Module,)
+    default_config = {
+        # attribute/variable names that carry per-request token streams
+        "request_value_names": ("prompt", "prompt_tokens",
+                                "prefill_tokens", "generated", "toks",
+                                "tokens", "drafts", "draft"),
+        # names bound to jitted callables by project convention (the
+        # EngineCore paged-fn tuple) on top of locally-visible
+        # `x = jax.jit(...)` bindings
+        "extra_jitted_names": ("pre_scan", "pre_chunk", "verify"),
+    }
+
+    def _jitted_names(self, ctx: ModuleContext) -> Set[str]:
+        names: Set[str] = set(self.config["extra_jitted_names"])
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and _is_trace_wrapper(node.value.func):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+        return names
+
+    def _tainted_names(self, scope: ast.AST) -> Dict[str, str]:
+        """local name -> reason, for names assigned from unbounded
+        per-request slices/lengths."""
+        req_names = set(self.config["request_value_names"])
+        tainted: Dict[str, str] = {}
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Assign):
+                continue
+            reason = self._request_shaped(node.value, req_names)
+            if reason:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        tainted[t.id] = reason
+        return tainted
+
+    @staticmethod
+    def _request_shaped(expr: ast.AST, req_names: Set[str]
+                        ) -> Optional[str]:
+        """A slice or len() over a per-request token stream."""
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Subscript) \
+                    and isinstance(node.slice, ast.Slice):
+                base = node.value
+                base_name = (base.attr if isinstance(base, ast.Attribute)
+                             else base.id if isinstance(base, ast.Name)
+                             else None)
+                if base_name in req_names:
+                    return (f"sliced from per-request "
+                            f"{base_name!r}")
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "len" and node.args:
+                a = node.args[0]
+                a_name = (a.attr if isinstance(a, ast.Attribute)
+                          else a.id if isinstance(a, ast.Name) else None)
+                if a_name in req_names:
+                    return f"len() of per-request {a_name!r}"
+        return None
+
+    def visit(self, node: ast.Module, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        jitted = self._jitted_names(ctx)
+        req_names = set(self.config["request_value_names"])
+        for scope in ast.walk(ctx.tree):
+            if not isinstance(scope, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            tainted = self._tainted_names(scope)
+            for call in ast.walk(scope):
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Name)
+                        and call.func.id in jitted):
+                    continue
+                for arg in call.args:
+                    reason = self._request_shaped(arg, req_names)
+                    if reason is None:
+                        for sub in ast.walk(arg):
+                            if isinstance(sub, ast.Name) \
+                                    and sub.id in tainted:
+                                reason = tainted[sub.id]
+                                break
+                    if reason:
+                        yield self.finding(
+                            ctx, call,
+                            f"argument to jitted {call.func.id!r} is "
+                            f"{reason}: its shape varies per request, "
+                            f"so every distinct length compiles a new "
+                            f"trace -- pad to a config-bounded width "
+                            f"(chunk size / power-of-two rows)")
+                        break
+
+
+# ---------------------------------------------------------------------------
+# REPRO006 -- metric-name-hygiene
+# ---------------------------------------------------------------------------
+
+_METRIC_CTORS = {"counter": "counter", "gauge": "gauge",
+                 "histogram": "histogram"}
+_METRIC_USES = {"inc": "counter", "observe": "histogram", "set": "gauge"}
+_METRIC_NAME_RE = re.compile(
+    r"^(engine|kv|pressure|prefix)_[a-z0-9_]+$")
+
+
+class MetricNameHygiene(Rule):
+    name = "metric-name-hygiene"
+    code = "REPRO006"
+    description = ("registry metric names must match "
+                   "engine_*|kv_*|pressure_*|prefix_* with _total "
+                   "(counters) / _seconds-style unit (histograms) "
+                   "suffixes, and each name must be created at exactly "
+                   "one site")
+    paths = ("repro/",)
+    node_types = (ast.Call,)
+    default_config = {
+        "prefixes": ("engine", "kv", "pressure", "prefix"),
+        "histogram_suffixes": ("_seconds", "_rate", "_length", "_bytes",
+                               "_tokens"),
+    }
+
+    def __init__(self, **config):
+        super().__init__(**config)
+        # literal name -> [(path, line, suppressed)]
+        self._creation_sites: Dict[str, List[Tuple[str, int, bool]]] = {}
+
+    def _name_findings(self, kind: str, name_node: ast.AST,
+                       ctx: ModuleContext, call: ast.Call
+                       ) -> Iterable[Finding]:
+        prefixes = self.config["prefixes"]
+        hist_sfx = tuple(self.config["histogram_suffixes"])
+        if isinstance(name_node, ast.Constant) \
+                and isinstance(name_node.value, str):
+            name = name_node.value
+            head, tail = name, name
+        elif isinstance(name_node, ast.JoinedStr) and name_node.values:
+            first, last = name_node.values[0], name_node.values[-1]
+            if not (isinstance(first, ast.Constant)
+                    and isinstance(first.value, str)):
+                yield self.finding(
+                    ctx, call,
+                    f"{kind} name is an f-string with a dynamic "
+                    f"prefix: the registry prefix must be a static "
+                    f"literal so conventions are checkable")
+                return
+            head = first.value
+            tail = (last.value if isinstance(last, ast.Constant)
+                    and isinstance(last.value, str) else None)
+            name = None
+        else:
+            return                      # dynamic: not statically checkable
+        if not any(head.startswith(p + "_") for p in prefixes):
+            yield self.finding(
+                ctx, call,
+                f"{kind} name {head!r}... does not start with one of "
+                f"the registry prefixes {'|'.join(prefixes)}_")
+        if name is not None and not _METRIC_NAME_RE.match(name):
+            if any(name.startswith(p + "_") for p in prefixes):
+                yield self.finding(
+                    ctx, call,
+                    f"{kind} name {name!r} must be snake_case "
+                    f"[a-z0-9_] after its registry prefix")
+        if tail is not None:
+            if kind == "counter" and not tail.endswith("_total"):
+                yield self.finding(
+                    ctx, call,
+                    f"counter name {tail!r} must end in _total "
+                    f"(Prometheus counter convention)")
+            elif kind == "histogram" and not tail.endswith(hist_sfx):
+                yield self.finding(
+                    ctx, call,
+                    f"histogram name {tail!r} must end in a unit "
+                    f"suffix ({', '.join(hist_sfx)})")
+
+    def visit(self, node: ast.Call, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        if not isinstance(node.func, ast.Attribute) or not node.args:
+            return
+        attr = node.func.attr
+        kind = _METRIC_CTORS.get(attr) or _METRIC_USES.get(attr)
+        if kind is None:
+            return
+        name_node = node.args[0]
+        # non-registry .set()/.inc()/... calls (jnp .at[].set, Counter
+        # objects) never pass a string first: the literal filter is the
+        # discriminator
+        if not isinstance(name_node, (ast.Constant, ast.JoinedStr)):
+            return
+        if isinstance(name_node, ast.Constant) \
+                and not isinstance(name_node.value, str):
+            return
+        yield from self._name_findings(kind, name_node, ctx, node)
+        if attr in _METRIC_CTORS and isinstance(name_node, ast.Constant):
+            self._creation_sites.setdefault(name_node.value, []).append(
+                (ctx.rel, node.lineno,
+                 ctx.is_suppressed(self.name, node.lineno)))
+
+    def finalize(self) -> Iterable[Finding]:
+        for name, sites in sorted(self._creation_sites.items()):
+            if len(sites) <= 1:
+                continue
+            first = f"{sites[0][0]}:{sites[0][1]}"
+            for path, line, suppressed in sites[1:]:
+                f = Finding(
+                    rule=self.name, code=self.code,
+                    severity=self.severity, path=path, line=line, col=1,
+                    message=f"metric {name!r} is created at more than "
+                            f"one site (first at {first}): one name = "
+                            f"one owner, share the metric object "
+                            f"instead")
+                f.suppressed = suppressed or sites[0][2]
+                yield f
+
+
+# ---------------------------------------------------------------------------
+# REPRO007 -- silent-drop
+# ---------------------------------------------------------------------------
+
+class SilentDrop(Rule):
+    name = "silent-drop"
+    code = "REPRO007"
+    description = ("bounded deques evict their oldest entry silently on "
+                   "append; engine-visible buffers must count evictions "
+                   "(PR 6's orphan-event drops) or carry an explicit "
+                   "suppression naming the eviction policy")
+    paths = ("repro/serving/",)
+    node_types = (ast.Call,)
+
+    @staticmethod
+    def _class_counts_drops(cls: Optional[ast.ClassDef]) -> bool:
+        if cls is None:
+            return False
+        for node in ast.walk(cls):
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute) \
+                            and "dropped" in t.attr:
+                        return True
+        return False
+
+    def visit(self, node: ast.Call, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        dn = dotted_name(node.func)
+        if dn is None or dn.split(".")[-1] != "deque":
+            return
+        maxlen = next((kw.value for kw in node.keywords
+                       if kw.arg == "maxlen"), None)
+        if maxlen is None or (isinstance(maxlen, ast.Constant)
+                              and maxlen.value is None):
+            return
+        if self._class_counts_drops(ctx.enclosing_class(node)):
+            return
+        yield self.finding(
+            ctx, node,
+            f"bounded deque(maxlen=...) evicts silently on append: "
+            f"count evictions (cf. _CountingDeque / "
+            f"stats()['orphans_dropped']) or suppress with the "
+            f"eviction policy spelled out")
+
+
+# ---------------------------------------------------------------------------
+# REPRO008 -- swallowed-exception
+# ---------------------------------------------------------------------------
+
+_BROAD_EXCEPTIONS = {"Exception", "BaseException"}
+
+
+class SwallowedException(Rule):
+    name = "swallowed-exception"
+    code = "REPRO008"
+    description = ("no bare except:, and no broad Exception handler "
+                   "that swallows silently, in engine code -- a fault "
+                   "the engine cannot classify must propagate (the "
+                   "quarantine/EngineError taxonomy depends on it)")
+    paths = ("repro/serving/",)
+    node_types = (ast.ExceptHandler,)
+
+    def visit(self, node: ast.ExceptHandler, ctx: ModuleContext
+              ) -> Iterable[Finding]:
+        if node.type is None:
+            yield self.finding(
+                ctx, node,
+                "bare except: catches everything including "
+                "KeyboardInterrupt/SystemExit -- name the exceptions "
+                "the handler can actually handle")
+            return
+        names = (node.type.elts if isinstance(node.type, ast.Tuple)
+                 else [node.type])
+        broad = [dotted_name(n) for n in names]
+        if not any(b in _BROAD_EXCEPTIONS for b in broad if b):
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, (ast.Raise, ast.Call, ast.Return,
+                                ast.Yield)):
+                return                   # observable: re-raise/handle/log
+        yield self.finding(
+            ctx, node,
+            "broad except Exception: handler swallows the error with "
+            "no raise/call/return -- engine faults must feed the "
+            "quarantine/EngineError taxonomy, not vanish")
+
+
+ALL_RULES = (UnresolvableExcept, RawWallClock, MutableDefault,
+             TraceImpurity, RetraceHazard, MetricNameHygiene, SilentDrop,
+             SwallowedException)
+
+RULE_INDEX = {r.name: r for r in ALL_RULES}
+
+
+def default_rules() -> List[Rule]:
+    return [cls() for cls in ALL_RULES]

@@ -88,19 +88,19 @@ def main(argv=None):
         host = "host0"
         with mesh:
             for step in range(start, args.steps):
-                t0 = time.perf_counter()
+                t0 = time.perf_counter()  # repro-lint: disable=raw-wall-clock (CLI wall time)
                 batch = data.next()
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 state, metrics = step_fn(state, batch)
                 if step % 5 == 0 or step == args.steps - 1:
                     loss = float(metrics["loss"])
-                    dt = time.perf_counter() - t0
+                    dt = time.perf_counter() - t0  # repro-lint: disable=raw-wall-clock
                     tok_s = args.batch * args.seq / dt
                     print(f"step {step:5d} loss {loss:8.4f} "
                           f"lr {float(metrics['lr']):.2e} "
                           f"gnorm {float(metrics['grad_norm']):8.3f} "
                           f"{tok_s:9.0f} tok/s", flush=True)
-                stragglers.record(host, time.perf_counter() - t0)
+                stragglers.record(host, time.perf_counter() - t0)  # repro-lint: disable=raw-wall-clock
                 cadence.record_steps()
                 every = min(tcfg.checkpoint_every, cadence.cadence())
                 if (step + 1) % every == 0:

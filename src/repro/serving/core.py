@@ -640,7 +640,7 @@ class EngineCore:
 
             def pre_chunk(params, chunk, pools, table_row, pos_start,
                           n_valid):
-                core.prefill_trace_count += 1      # host-side, trace-time
+                core.prefill_trace_count += 1  # repro-lint: disable=trace-impurity (trace-count marker)
                 logits, pools = model.prefill_chunk_paged(
                     params, chunk, pools, table_row, pos_start, n_valid,
                     impl=impl)
@@ -652,7 +652,7 @@ class EngineCore:
                 return pools, last
 
             def verify(params, chunk, pools, table, pos_start, n_valid):
-                core.spec_trace_count += 1     # host-side, trace-time
+                core.spec_trace_count += 1  # repro-lint: disable=trace-impurity (trace-count marker)
                 logits, pools = model.prefill_chunk_paged(
                     params, chunk, pools, table, pos_start, n_valid,
                     impl=impl)
@@ -1071,6 +1071,9 @@ class EngineCore:
                 except InjectedFault as e:
                     self._quarantine(req, e, events)
                     continue
+                # repro-lint: disable=retrace-hazard (the scan
+                # oracle deliberately traces per prompt length; the
+                # production path is the chunked paged prefill)
                 self.pools, last_logits = pre_scan(
                     self.params, jnp.asarray(toks[None]), self.pools,
                     jnp.asarray(mgr.device_row(slot)),

@@ -18,6 +18,7 @@ output is bit-identical to the pre-core engine.  New code should drive
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Iterable, Optional
@@ -61,7 +62,9 @@ class _StreamDrain:
     def __del__(self):
         try:
             self.close()
-        except Exception:
+        # finalizer: the interpreter may be tearing down, nothing to
+        # feed the fault taxonomy here
+        except Exception:  # repro-lint: disable=swallowed-exception
             pass
 
 
@@ -100,8 +103,13 @@ class ServeEngine:
     # interleaved streams on the one shared core route -- not drop --
     # each other's tokens
     _stream_subs: list = field(default_factory=list, repr=False)
+    # injectable clock shared with the core: both the wrapper's measured
+    # durations (throughput_tokens_per_s) and EngineCore._clock read the
+    # same function, so frozen-clock tests cover wrapper timing too
+    clock: Optional[object] = None
 
     def __post_init__(self):
+        self._clock = self.clock or time.monotonic
         self._decode = jax.jit(
             lambda p, t, c, pos: self.model.decode_step(p, t, c, pos),
             donate_argnums=(2,))   # KV cache updated in place
@@ -119,7 +127,8 @@ class ServeEngine:
                                     self.serve,
                                     fn_cache=self._paged_fn_cache,
                                     detokenize=self.detokenize,
-                                    injector=self.injector)
+                                    injector=self.injector,
+                                    clock=self._clock)
         return self._core
 
     # Back-compat observability aliases: benchmarks/tests read these off
@@ -279,18 +288,19 @@ class ServeEngine:
 
     def throughput_tokens_per_s(self, batch: int, prompt_len: int,
                                 n_new: int = 8) -> float:
-        """Measured decode throughput (benchmark helper)."""
-        import time
+        """Measured decode throughput (benchmark helper).  Durations
+        are read off the engine's injectable clock (``self._clock``),
+        so a manual clock makes the reported rate deterministic."""
         tokens = jnp.zeros((batch, prompt_len), jnp.int32)
         cache, logits = self.prefill(tokens)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
         # warmup + timed loop
         logits, cache = self._decode(self.params, tok, cache, prompt_len)
         jax.block_until_ready(logits)
-        t0 = time.perf_counter()
+        t0 = self._clock()
         for i in range(n_new):
             logits, cache = self._decode(self.params, tok, cache,
                                          prompt_len + 1 + i)
         jax.block_until_ready(logits)
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         return batch * n_new / dt

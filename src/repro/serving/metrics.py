@@ -323,7 +323,7 @@ class LifecycleTracer:
         self.clock = clock
         self.open: Dict[int, Dict[str, float]] = {}   # rid -> span -> t0
         self._live: Dict[int, dict] = {}              # rid -> record
-        self.completed: deque = deque(maxlen=self.COMPLETED_LOG)
+        self.completed: deque = deque(maxlen=self.COMPLETED_LOG)  # repro-lint: disable=silent-drop (bounded span log; histograms keep the totals)
         h = registry.histogram
         self._h_queue = h("engine_queue_delay_seconds",
                           help="submit to first admission")
@@ -476,7 +476,7 @@ class FlightRecorder:
             raise ValueError(f"flight recorder needs capacity >= 1, "
                              f"got {capacity}")
         self.capacity = capacity
-        self.records: deque = deque(maxlen=capacity)
+        self.records: deque = deque(maxlen=capacity)  # repro-lint: disable=silent-drop (flight ring: overwrite-oldest is the point)
         self.dumps = 0
 
     def record(self, rec: dict) -> None:

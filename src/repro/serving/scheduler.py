@@ -266,7 +266,7 @@ class ContinuousBatchScheduler:
         # scheduler now lives on a persistent core, so an unbounded list
         # would grow with every request ever served; ``finished_count``
         # is the monotonic total.
-        self.finished: deque = deque(maxlen=4096)
+        self.finished: deque = deque(maxlen=4096)  # repro-lint: disable=silent-drop (debug log; finished_count is the monotonic total)
         self.finished_count = 0
         self.preempt_count = 0
         self._admit_seq = 0

@@ -60,7 +60,7 @@ class CheckpointManager:
             "leaves": [{"dtype": str(a.dtype), "shape": list(a.shape)}
                        for a in host_leaves],
             "extras": extras or {},
-            "time": time.time(),
+            "time": time.time(),  # repro-lint: disable=raw-wall-clock (manifest timestamp)
         }
         for i, a in enumerate(host_leaves):
             # numpy can't (de)serialize ml_dtypes (bfloat16 etc.); store

@@ -1,0 +1,611 @@
+"""repro-lint: framework semantics, the 8-rule catalogue (one
+true-positive + one true-negative per rule), suppression honoring,
+reporters, CLI exit codes, and the meta-test that the live tree is
+clean.
+
+Fixture modules are written under tmp_path at repo-shaped relative
+paths (``repro/serving/...``) because several rules scope themselves by
+path fragment; keeping them as string literals (not checked-in .py
+files) means the CI sweep of ``src/ tests/`` never sees the deliberate
+positives.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (ALL_RULES, RULE_INDEX, LintEngine,
+                                 default_rules, lint_paths, render_json,
+                                 render_text)
+from repro.analysis.lint.cli import build_rules, main as lint_main
+from repro.analysis.lint.framework import ModuleContext
+
+SERVING = "repro/serving/mod.py"
+
+
+def run_lint(tmp_path, sources, rules=None):
+    """sources: {relpath: code} written under tmp_path, then swept."""
+    if isinstance(sources, str):
+        sources = {SERVING: sources}
+    for rel, code in sources.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(code))
+    engine = LintEngine(default_rules() if rules is None else rules)
+    return engine.run([str(tmp_path)])
+
+
+def active_rules(result):
+    return sorted({f.rule for f in result.active})
+
+
+# ---------------------------------------------------------------------------
+# REPRO001 unresolvable-except
+# ---------------------------------------------------------------------------
+
+def test_unresolvable_except_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        def admit(self):
+            try:
+                self.alloc()
+            except OutOfPages:
+                return None
+    """)
+    (f,) = [f for f in res.active if f.rule == "unresolvable-except"]
+    assert "OutOfPages" in f.message and f.line == 5
+
+
+def test_unresolvable_except_true_negative(tmp_path):
+    res = run_lint(tmp_path, """
+        from repro.serving.paging import OutOfPages
+        import errors
+
+        def admit(self):
+            LocalError = ValueError
+            try:
+                self.alloc()
+            except (OutOfPages, errors.Timeout, LocalError):
+                return None
+            except ValueError:
+                return None
+    """)
+    assert "unresolvable-except" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# REPRO002 raw-wall-clock
+# ---------------------------------------------------------------------------
+
+def test_raw_wall_clock_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+        from time import perf_counter
+
+        def step(self):
+            t0 = time.perf_counter()
+            t1 = perf_counter()
+            return t1 - t0
+    """)
+    hits = [f for f in res.active if f.rule == "raw-wall-clock"]
+    assert [f.line for f in hits] == [6, 7]
+
+
+def test_raw_wall_clock_true_negative(tmp_path):
+    # binding the function (no call) and reading through the injectable
+    # attribute are both the sanctioned pattern
+    res = run_lint(tmp_path, """
+        import time
+
+        class Core:
+            def __init__(self, clock=None):
+                self._clock = clock or time.monotonic
+
+            def step(self):
+                return self._clock()
+    """)
+    assert "raw-wall-clock" not in active_rules(res)
+
+
+def test_raw_wall_clock_scoped_to_engine_paths(tmp_path):
+    # the same raw read outside serving/launch/training is not this
+    # rule's business
+    res = run_lint(tmp_path, {"repro/kernels/mod.py": """
+        import time
+
+        def bench():
+            return time.perf_counter()
+    """})
+    assert "raw-wall-clock" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# REPRO003 mutable-default
+# ---------------------------------------------------------------------------
+
+def test_mutable_default_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        from dataclasses import dataclass
+
+        def collect(x, acc=[], *, index={}):
+            acc.append(x)
+
+        @dataclass
+        class Params:
+            stop_strings: list = []
+    """)
+    hits = [f for f in res.active if f.rule == "mutable-default"]
+    assert len(hits) == 3
+    assert any("'acc'" in f.message for f in hits)
+    assert any("default_factory" in f.message for f in hits)
+
+
+def test_mutable_default_true_negative(tmp_path):
+    res = run_lint(tmp_path, """
+        from dataclasses import dataclass, field
+
+        def collect(x, acc=None, *, index=None, k=3, name="q"):
+            acc = [] if acc is None else acc
+
+        @dataclass
+        class Params:
+            stop_strings: list = field(default_factory=list)
+
+        class NotADataclass:
+            registry = {}     # class attr on a plain class: fine
+    """)
+    assert "mutable-default" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# REPRO004 trace-impurity
+# ---------------------------------------------------------------------------
+
+def test_trace_impurity_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+        import jax
+
+        def decode(params, tok, core):
+            core.count += 1
+            print("decoding", tok)
+            t = time.perf_counter()
+            return tok
+
+        run = jax.jit(decode)
+    """)
+    msgs = [f.message for f in res.active if f.rule == "trace-impurity"]
+    assert len(msgs) == 3
+    assert any("mutates attribute" in m for m in msgs)
+    assert any("print()" in m for m in msgs)
+    assert any("host clock" in m for m in msgs)
+
+
+def test_trace_impurity_comprehension_seeding(tmp_path):
+    # the EngineCore idiom: tuple(jit(f) for f in (a, b)) must seed
+    # every name in the iterated tuple
+    res = run_lint(tmp_path, """
+        import jax
+
+        def pre(params, x, core):
+            core.traces += 1
+            return x
+
+        def dec(params, x, core):
+            return x
+
+        fns = tuple(jax.jit(f) for f in (pre, dec))
+    """)
+    hits = [f for f in res.active if f.rule == "trace-impurity"]
+    assert len(hits) == 1 and "core.traces" in hits[0].message
+
+
+def test_trace_impurity_tracer_truthiness(tmp_path):
+    res = run_lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def guard(logits):
+            if jnp.any(jnp.isnan(logits)):
+                return logits * 0
+            return logits
+    """)
+    hits = [f for f in res.active if f.rule == "trace-impurity"]
+    assert len(hits) == 1 and "truthiness" in hits[0].message
+
+
+def test_trace_impurity_true_negative(tmp_path):
+    # pure traced fn; host-side print/clock outside the traced region
+    res = run_lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def decode(params, tok, causal=True):
+            if causal:                      # static python flag: fine
+                tok = tok + 1
+            return jnp.maximum(tok, 0)
+
+        def host_loop(clock):
+            print("stepping")
+            return clock()
+    """)
+    assert "trace-impurity" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# REPRO005 retrace-hazard
+# ---------------------------------------------------------------------------
+
+def test_retrace_hazard_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        run = jax.jit(lambda p, t: t)
+
+        def prefill(self, req, start):
+            toks = req.prefill_tokens[start:]
+            return run(self.params, jnp.asarray(toks[None]))
+    """)
+    hits = [f for f in res.active if f.rule == "retrace-hazard"]
+    assert len(hits) == 1
+    assert "prefill_tokens" in hits[0].message and hits[0].line == 9
+
+
+def test_retrace_hazard_true_negative(tmp_path):
+    # config-bounded chunk shapes never taint the jitted call
+    res = run_lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        run = jax.jit(lambda p, t: t)
+
+        def prefill(self, req):
+            chunk = jnp.zeros((self.serve.prefill_chunk,), jnp.int32)
+            return run(self.params, chunk)
+    """)
+    assert "retrace-hazard" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# REPRO006 metric-name-hygiene
+# ---------------------------------------------------------------------------
+
+def test_metric_name_hygiene_true_positive(tmp_path):
+    res = run_lint(tmp_path, {"repro/serving/m.py": """
+        def setup(m):
+            m.counter("engine_steps", help="missing total suffix")
+            m.counter("requests_total", help="unknown prefix")
+            m.histogram("engine_step_ms", (), help="bad unit")
+    """})
+    hits = [f for f in res.active if f.rule == "metric-name-hygiene"]
+    assert len(hits) == 3
+    assert any("_total" in f.message for f in hits)
+    assert any("prefix" in f.message for f in hits)
+    assert any("unit suffix" in f.message for f in hits)
+
+
+def test_metric_name_hygiene_true_negative(tmp_path):
+    res = run_lint(tmp_path, {"repro/serving/m.py": """
+        def setup(m, k, phase):
+            m.counter("engine_steps_total", help="ok")
+            m.histogram("engine_step_seconds", (), help="ok")
+            m.gauge("kv_pages_used", help="ok")
+            m.inc(f"pressure_{k}_total")
+            m.observe(f"engine_phase_{phase}_seconds", 0.1)
+            # non-registry .set()/.inc() with non-str first arg: ignored
+            arr.at[0].set(1.0)
+            counter_obj.inc(3)
+    """})
+    assert "metric-name-hygiene" not in active_rules(res)
+
+
+def test_metric_duplicate_creation_site_across_modules(tmp_path):
+    res = run_lint(tmp_path, {
+        "repro/serving/a.py": """
+            def setup(m):
+                m.counter("engine_dup_total", help="owner")
+        """,
+        "repro/serving/b.py": """
+            def setup(m):
+                m.counter("engine_dup_total", help="squatter")
+        """,
+    })
+    hits = [f for f in res.active if f.rule == "metric-name-hygiene"]
+    assert len(hits) == 1
+    assert "more than one site" in hits[0].message
+    assert hits[0].path.endswith("b.py")      # first site is the owner
+
+
+# ---------------------------------------------------------------------------
+# REPRO007 silent-drop
+# ---------------------------------------------------------------------------
+
+def test_silent_drop_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        from collections import deque
+
+        class EventBus:
+            def __init__(self):
+                self.orphans = deque(maxlen=1024)
+    """)
+    hits = [f for f in res.active if f.rule == "silent-drop"]
+    assert len(hits) == 1 and hits[0].line == 6
+
+
+def test_silent_drop_true_negative(tmp_path):
+    res = run_lint(tmp_path, """
+        from collections import deque
+
+        class CountingBus:
+            def __init__(self):
+                self.orphans = deque(maxlen=1024)
+                self.dropped = 0
+
+        class Unbounded:
+            def __init__(self):
+                self.log = deque()
+                self.log2 = deque(maxlen=None)
+    """)
+    assert "silent-drop" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# REPRO008 swallowed-exception
+# ---------------------------------------------------------------------------
+
+def test_swallowed_exception_true_positive(tmp_path):
+    res = run_lint(tmp_path, """
+        def step(self):
+            try:
+                self.launch()
+            except:
+                pass
+
+        def drain(self):
+            try:
+                self.flush()
+            except Exception:
+                self.ok = False
+    """)
+    hits = [f for f in res.active if f.rule == "swallowed-exception"]
+    assert len(hits) == 2
+    assert "bare except" in hits[0].message
+
+
+def test_swallowed_exception_true_negative(tmp_path):
+    res = run_lint(tmp_path, """
+        def step(self):
+            try:
+                self.launch()
+            except Exception as e:
+                raise EngineError(str(e))
+
+        def drain(self):
+            try:
+                self.flush()
+            except ValueError:
+                pass                      # specific: allowed
+
+        def log_it(self):
+            try:
+                self.flush()
+            except Exception as e:
+                self.log.warning("flush failed: %s", e)
+    """)
+    assert "swallowed-exception" not in active_rules(res)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_honored(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+
+        def step(self):
+            return time.perf_counter()  # repro-lint: disable=raw-wall-clock (why)
+    """)
+    assert res.active == [] and len(res.suppressed) == 1
+    assert res.suppressed[0].rule == "raw-wall-clock"
+
+
+def test_standalone_comment_suppresses_next_line(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+
+        def step(self):
+            # repro-lint: disable=raw-wall-clock
+            return time.perf_counter()
+    """)
+    assert res.active == [] and len(res.suppressed) == 1
+
+
+def test_file_pragma_and_disable_all(tmp_path):
+    res = run_lint(tmp_path, {SERVING: """
+        # repro-lint: disable-file=raw-wall-clock
+        import time
+
+        def a(self):
+            return time.time()
+
+        def b(self, x=[]):       # repro-lint: disable=all
+            return time.monotonic()
+
+        def c(self, y={}):
+            pass
+    """})
+    # the file pragma covers every clock read; disable=all covers b's
+    # mutable default; c's default is the one live finding
+    assert [f.rule for f in res.active] == ["mutable-default"]
+    assert res.active[0].line == 11
+    assert {f.rule for f in res.suppressed} >= {"raw-wall-clock",
+                                                "mutable-default"}
+
+
+def test_suppression_does_not_leak_to_other_rules(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+
+        def step(self):
+            return time.perf_counter()  # repro-lint: disable=silent-drop
+    """)
+    assert [f.rule for f in res.active] == ["raw-wall-clock"]
+
+
+# ---------------------------------------------------------------------------
+# reporters + CLI
+# ---------------------------------------------------------------------------
+
+def test_json_reporter_schema(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+
+        def step(self):
+            return time.time()
+    """)
+    payload = json.loads(render_json(res))
+    assert payload["tool"] == "repro-lint" and payload["version"] == 1
+    assert payload["files_checked"] == 1
+    assert payload["summary"]["errors"] == 1
+    (f,) = payload["findings"]
+    assert set(f) == {"rule", "code", "severity", "path", "line", "col",
+                      "message", "suppressed"}
+    assert f["rule"] == "raw-wall-clock" and f["code"] == "REPRO002"
+    assert f["line"] == 5 and f["suppressed"] is False
+
+
+def test_text_reporter_locations(tmp_path):
+    res = run_lint(tmp_path, """
+        import time
+
+        def step(self):
+            return time.time()
+    """)
+    out = render_text(res)
+    assert "mod.py:5:" in out and "[REPRO002 raw-wall-clock]" in out
+    assert "1 findings" in out
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = tmp_path / "repro" / "serving" / "ok.py"
+    clean.parent.mkdir(parents=True)
+    clean.write_text("x = 1\n")
+    assert lint_main([str(tmp_path)]) == 0
+    dirty = tmp_path / "repro" / "serving" / "bad.py"
+    dirty.write_text("import time\n\n\ndef f():\n"
+                     "    return time.time()\n")
+    assert lint_main([str(tmp_path), "--format=json"]) == 1
+    out = capsys.readouterr().out
+    payload = json.loads(out[out.index("{"):])
+    assert payload["summary"]["errors"] == 1
+    assert lint_main([]) == 2                      # no paths
+    assert lint_main([str(tmp_path), "--select", "nope"]) == 2
+
+
+def test_cli_select_and_ignore(tmp_path):
+    bad = tmp_path / "repro" / "serving" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n\n\ndef f(x=[]):\n"
+                   "    return time.time()\n")
+    # only mutable-default selected: the clock read is not reported
+    rules = build_rules(select=["mutable-default"])
+    res = LintEngine(rules).run([str(tmp_path)])
+    assert active_rules(res) == ["mutable-default"]
+    rules = build_rules(ignore=["mutable-default"])
+    res = LintEngine(rules).run([str(tmp_path)])
+    assert active_rules(res) == ["raw-wall-clock"]
+
+
+def test_cli_severity_override(tmp_path):
+    bad = tmp_path / "repro" / "serving" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n\n\ndef f():\n"
+                   "    return time.time()\n")
+    rules = build_rules(severity=["raw-wall-clock=warning"])
+    res = LintEngine(rules).run([str(tmp_path)])
+    assert len(res.active) == 1 and res.errors == []
+    # warnings don't fail the CLI
+    assert lint_main([str(tmp_path), "--severity",
+                      "raw-wall-clock=warning"]) == 0
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    res = LintEngine(default_rules()).run([str(tmp_path)])
+    (f,) = res.active
+    assert f.code == "REPRO000" and f.rule == "syntax-error"
+
+
+def test_rule_catalogue_complete():
+    assert len(ALL_RULES) == 8
+    assert len({r.code for r in ALL_RULES}) == 8
+    assert set(RULE_INDEX) == {
+        "unresolvable-except", "raw-wall-clock", "mutable-default",
+        "trace-impurity", "retrace-hazard", "metric-name-hygiene",
+        "silent-drop", "swallowed-exception"}
+    for r in ALL_RULES:
+        assert r.description and r.code.startswith("REPRO")
+
+
+# ---------------------------------------------------------------------------
+# the meta-tests: the live tree is clean, and known bug classes are
+# caught when reintroduced
+# ---------------------------------------------------------------------------
+
+def _repo_root():
+    import os
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(here)
+
+
+def test_live_tree_lints_clean():
+    import os
+    root = _repo_root()
+    res = lint_paths(os.path.join(root, "src"),
+                     os.path.join(root, "tests"))
+    assert res.files_checked > 80
+    assert res.active == [], "\n" + render_text(res)
+    # the sweep is real: the intentional sites are suppressed, not absent
+    assert len(res.suppressed) >= 15
+
+
+@pytest.mark.parametrize("snippet,rule", [
+    # PR 6's bug: except on a name the module never imports
+    ("""
+     def admit(self):
+         try:
+             self.alloc()
+         except OutOfPages:
+             pass
+     """, "unresolvable-except"),
+    # PR 8's bug: stray perf_counter inside engine code
+    ("""
+     import time
+
+     def step(self):
+         t0 = time.perf_counter()
+         return t0
+     """, "raw-wall-clock"),
+])
+def test_reintroduced_bug_classes_fail_the_gate(tmp_path, snippet, rule):
+    res = run_lint(tmp_path, snippet)
+    hits = [f for f in res.active if f.rule == rule]
+    assert hits, f"{rule} did not fire on its historical bug class"
+    assert all(f.path.endswith("mod.py") and f.line > 1 for f in hits)
+
+
+def test_suppression_regex_tolerates_justifications(tmp_path):
+    # the recommended style: a parenthetical why after the rule token
+    src = ("import time\n\n\ndef f():\n    return time.time()  "
+           "# repro-lint: disable=raw-wall-clock (heartbeat)\n")
+    p = tmp_path / "repro" / "serving" / "j.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(src)
+    res = LintEngine(default_rules()).run([str(tmp_path)])
+    assert res.active == [] and len(res.suppressed) == 1

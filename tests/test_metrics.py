@@ -459,3 +459,47 @@ def test_telemetry_is_trace_neutral_and_bit_identical(built):
     assert off_core.tracer is None and off_core.flight is None
     # metrics-off still keeps the stats() contract alive
     assert off_core.stats()["finished"] == len(specs)
+
+
+def test_serve_engine_wrapper_shares_injectable_clock(built):
+    """PR 10 satellite: the dense-path wrapper's measured durations ride
+    the same injectable clock as ``EngineCore._clock`` -- one clock
+    object governs every timing read in the serving stack."""
+    from repro.serving.engine import ServeEngine
+    model, params, cfg = built
+
+    class Ticking:
+        """Advances a fixed half second per read."""
+
+        def __init__(self):
+            self.t = 100.0
+            self.reads = 0
+
+        def __call__(self):
+            self.reads += 1
+            t, self.t = self.t, self.t + 0.5
+            return t
+
+    clock = Ticking()
+    serve = ServeConfig(max_seq_len=96, page_size=16, prefill_chunk=16,
+                        max_batch=2)
+    engine = ServeEngine(model=model, params=params, cfg=cfg,
+                         serve=serve, clock=clock)
+    # the core created by the wrapper reads the *same* clock object
+    assert engine.core._clock is engine._clock
+    assert engine._clock is clock
+    # wrapper-reported throughput is exactly determined by the injected
+    # clock: two reads bracket the loop, dt == 0.5s
+    before = clock.reads
+    rate = engine.throughput_tokens_per_s(batch=2, prompt_len=8,
+                                          n_new=4)
+    assert clock.reads == before + 2
+    assert rate == pytest.approx(2 * 4 / 0.5)
+
+
+def test_serve_engine_default_clock_is_monotonic(built):
+    import time as _time
+    from repro.serving.engine import ServeEngine
+    model, params, cfg = built
+    engine = ServeEngine(model=model, params=params, cfg=cfg)
+    assert engine._clock is _time.monotonic
